@@ -1,0 +1,54 @@
+"""Kernel-path microbenchmarks: the §3.2 bitmap AND filter, the §4.2
+bucketize probe, and §3.3 page inspection.
+
+On this CPU host the jnp reference path is the execution path (Pallas runs in
+interpret mode for validation only — see tests/test_kernels.py); derived
+fields report the arithmetic/bytes so the TPU roofline for each kernel can be
+read off: bitmap_and moves E*W*4 bytes per query (memory-bound on VPU).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core import bitmap as bm
+from repro.kernels.bitmap_and.ref import bitmap_and_any_ref
+from repro.kernels.bucketize.ref import bucketize_ref
+from repro.kernels.page_inspect.ref import page_inspect_ref
+
+V5E_HBM = 819e9
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+
+    e, w = 65_536, 13           # 64k entries, H=400 -> 13 words
+    entries = jnp.asarray(rng.integers(0, 2**32, (e, w), dtype=np.uint32))
+    query = jnp.asarray(rng.integers(0, 2**32, (w,), dtype=np.uint32))
+    us = timeit(lambda: bitmap_and_any_ref(entries, query), warmup=2, iters=5)
+    nbytes = e * w * 4
+    emit("kernel_bitmap_and_64k", us, bytes=nbytes,
+         tpu_roofline_us=round(nbytes / V5E_HBM * 1e6, 2))
+
+    n, h = 1_048_576, 400
+    bounds = jnp.asarray(np.linspace(0, 1e6, h + 1), jnp.float32)
+    values = jnp.asarray(rng.uniform(0, 1e6, n), jnp.float32)
+    us = timeit(lambda: bucketize_ref(values, bounds, h), warmup=2, iters=5)
+    emit("kernel_bucketize_1m", us, values=n,
+         tpu_roofline_us=round(n * 4 / V5E_HBM * 1e6, 2))
+
+    p, c = 16_384, 128
+    keys = jnp.asarray(rng.uniform(0, 1e6, (p, c)), jnp.float32)
+    valid = jnp.asarray(rng.random((p, c)) < 0.95)
+    mask = jnp.asarray(rng.random(p) < 0.3)
+    us = timeit(lambda: page_inspect_ref(keys, valid, mask, 1e5, 2e5)[1],
+                warmup=2, iters=5)
+    nbytes = p * c * 5
+    emit("kernel_page_inspect_16kpages", us, bytes=nbytes,
+         tpu_roofline_us=round(nbytes / V5E_HBM * 1e6, 2))
+
+
+if __name__ == "__main__":
+    run()

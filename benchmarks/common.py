@@ -1,0 +1,39 @@
+"""Shared benchmark helpers: timing + CSV emission.
+
+Every benchmark prints rows:  name,us_per_call,derived
+``derived`` is a ';'-separated key=value list (sizes, ratios, counts).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def timeit(fn, *, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time per call in microseconds (block on jax outputs)."""
+    for _ in range(warmup):
+        _block(fn())
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        _block(fn())
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def _block(out):
+    try:
+        jax.block_until_ready(out)
+    except Exception:  # noqa: BLE001 — host-side results
+        pass
+    return out
+
+
+def emit(name: str, us: float, **derived) -> None:
+    d = ";".join(f"{k}={v}" for k, v in derived.items())
+    ROWS.append((name, us, d))
+    print(f"{name},{us:.1f},{d}", flush=True)

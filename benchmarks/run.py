@@ -1,0 +1,61 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
+Scale with --quick for CI-speed runs.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig7]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (
+    bench_cost_model,
+    bench_fig6_overhead,
+    bench_fig7_selectivity,
+    bench_fig8_density,
+    bench_fig9_resolution,
+    bench_fig10_tpch,
+    bench_kernels,
+    bench_maintenance,
+)
+
+SUITES = {
+    "fig6": lambda quick: bench_fig6_overhead.run(
+        scales=(20_000, 100_000) if quick else bench_fig6_overhead.SCALES),
+    "fig7": lambda quick: bench_fig7_selectivity.run(
+        card=50_000 if quick else bench_fig7_selectivity.CARD),
+    "fig8": lambda quick: bench_fig8_density.run(
+        card=50_000 if quick else bench_fig8_density.CARD),
+    "fig9": lambda quick: bench_fig9_resolution.run(
+        card=50_000 if quick else bench_fig9_resolution.CARD),
+    "fig10": lambda quick: bench_fig10_tpch.run(
+        card=50_000 if quick else bench_fig10_tpch.CARD),
+    "cost_model": lambda quick: bench_cost_model.run(
+        card=50_000 if quick else bench_cost_model.CARD),
+    "maintenance": lambda quick: bench_maintenance.run(
+        card=50_000 if quick else bench_maintenance.CARD),
+    "kernels": lambda quick: bench_kernels.run(),
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None, choices=sorted(SUITES))
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name, fn in SUITES.items():
+        if args.only and name != args.only:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        fn(args.quick)
+    print(f"# total_wall_s={time.time()-t0:.1f}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

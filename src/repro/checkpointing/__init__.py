@@ -1,0 +1,3 @@
+from repro.checkpointing.checkpoint import (  # noqa: F401
+    CheckpointManager, restore_checkpoint, save_checkpoint,
+)

@@ -1,0 +1,7 @@
+"""Arch registry — importing this package registers every assigned config."""
+from repro.configs.base import (  # noqa: F401
+    SHAPES, ModelConfig, ShapeConfig, get_config, list_archs, register,
+    shape_cells,
+)
+from repro.configs import archs  # noqa: F401  (registers all architectures)
+from repro.configs import hippo_default  # noqa: F401

@@ -1,0 +1,3 @@
+from repro.core.baselines.btree import BPlusTree  # noqa: F401
+from repro.core.baselines.fullscan import FullScan  # noqa: F401
+from repro.core.baselines.minmax import MinMaxIndex  # noqa: F401

@@ -1,0 +1,195 @@
+"""B+-Tree baseline (§7.3's comparison target; §8 "Tree Index Structures").
+
+Node-based with a configurable fanout so storage and maintenance costs mirror
+a disk B+-Tree: every leaf stores (key, tuple-pointer) pairs — the per-tuple
+index entries whose volume is exactly what Hippo eliminates. We account:
+
+  * nbytes()          — total node storage (the 5–15% overhead of Table 1a)
+  * io.node_reads / node_writes / node_splits — maintenance cost metric
+    (the paper's insert-time comparison is I/O-bound tree traversal + splits)
+
+Leaves are numpy arrays for bulk-queries; structure mutations are per-key, as
+in the real thing. Keys are float32 attribute values; pointers are
+(page_id << 16 | slot) int64 tids.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class _IOCounters:
+    node_reads: int = 0
+    node_writes: int = 0
+    node_splits: int = 0
+
+
+class _Node:
+    __slots__ = ("leaf", "keys", "children", "ptrs", "next")
+
+    def __init__(self, leaf: bool):
+        self.leaf = leaf
+        self.keys: list[float] = []
+        self.children: list[_Node] = []   # internal
+        self.ptrs: list[int] = []         # leaf tuple pointers
+        self.next: "_Node | None" = None  # leaf chain
+
+
+@dataclass
+class BPlusTree:
+    fanout: int = 256
+    root: _Node = field(default_factory=lambda: _Node(leaf=True))
+    io: _IOCounters = field(default_factory=_IOCounters)
+    num_keys: int = 0
+
+    # -- bulk load (index initialization) ------------------------------------
+
+    @staticmethod
+    def bulk_load(values: np.ndarray, page_card: int, fanout: int = 256) -> "BPlusTree":
+        """Sorted bottom-up bulk load — the fast CREATE INDEX path."""
+        values = np.asarray(values, np.float32).ravel()
+        order = np.argsort(values, kind="stable")
+        tids = (order // page_card).astype(np.int64) << 16 | (order % page_card)
+        skeys = values[order]
+        t = BPlusTree(fanout=fanout)
+        leaf_cap = fanout
+        leaves: list[_Node] = []
+        for i in range(0, len(skeys), leaf_cap):
+            n = _Node(leaf=True)
+            n.keys = [float(k) for k in skeys[i : i + leaf_cap]]
+            n.ptrs = [int(p) for p in tids[i : i + leaf_cap]]
+            if leaves:
+                leaves[-1].next = n
+            leaves.append(n)
+            t.io.node_writes += 1
+        level = leaves
+        while len(level) > 1:
+            parents: list[_Node] = []
+            for i in range(0, len(level), fanout):
+                n = _Node(leaf=False)
+                n.children = level[i : i + fanout]
+                n.keys = [c.keys[0] for c in n.children[1:]]
+                parents.append(n)
+                t.io.node_writes += 1
+            level = parents
+        t.root = level[0] if level else _Node(leaf=True)
+        t.num_keys = len(skeys)
+        return t
+
+    # -- search ----------------------------------------------------------------
+
+    def _descend(self, key: float) -> _Node:
+        node = self.root
+        while not node.leaf:
+            self.io.node_reads += 1
+            idx = int(np.searchsorted(node.keys, key, side="right"))
+            node = node.children[idx]
+        self.io.node_reads += 1
+        return node
+
+    def range_search(self, lo: float, hi: float) -> list[int]:
+        """Return tuple pointers with key in [lo, hi]."""
+        out: list[int] = []
+        node = self._descend(lo)
+        while node is not None:
+            ks = np.asarray(node.keys, np.float32)
+            sel = np.flatnonzero((ks >= lo) & (ks <= hi))
+            out.extend(node.ptrs[i] for i in sel)
+            if len(node.keys) and node.keys[-1] > hi:
+                break
+            node = node.next
+            if node is not None:
+                self.io.node_reads += 1
+        return out
+
+    def count_range(self, lo: float, hi: float) -> int:
+        return len(self.range_search(lo, hi))
+
+    # -- maintenance -------------------------------------------------------------
+
+    def insert(self, key: float, tid: int) -> None:
+        path: list[tuple[_Node, int]] = []
+        node = self.root
+        while not node.leaf:
+            self.io.node_reads += 1
+            idx = int(np.searchsorted(node.keys, key, side="right"))
+            path.append((node, idx))
+            node = node.children[idx]
+        self.io.node_reads += 1
+        pos = int(np.searchsorted(node.keys, key, side="right"))
+        node.keys.insert(pos, float(key))
+        node.ptrs.insert(pos, int(tid))
+        self.io.node_writes += 1
+        self.num_keys += 1
+        # split up the path
+        while len(node.keys) > self.fanout:
+            self.io.node_splits += 1
+            mid = len(node.keys) // 2
+            right = _Node(leaf=node.leaf)
+            if node.leaf:
+                right.keys, node.keys = node.keys[mid:], node.keys[:mid]
+                right.ptrs, node.ptrs = node.ptrs[mid:], node.ptrs[:mid]
+                right.next, node.next = node.next, right
+                sep = right.keys[0]
+            else:
+                sep = node.keys[mid]
+                right.keys, node.keys = node.keys[mid + 1 :], node.keys[:mid]
+                right.children, node.children = node.children[mid + 1 :], node.children[: mid + 1]
+            self.io.node_writes += 2
+            if path:
+                parent, idx = path.pop()
+                parent.keys.insert(idx, float(sep))
+                parent.children.insert(idx + 1, right)
+                self.io.node_writes += 1
+                node = parent
+            else:
+                new_root = _Node(leaf=False)
+                new_root.keys = [float(sep)]
+                new_root.children = [node, right]
+                self.root = new_root
+                self.io.node_writes += 1
+                break
+
+    def delete(self, key: float) -> bool:
+        """Eager single-key delete (no rebalancing — conservative I/O count)."""
+        node = self._descend(key)
+        ks = np.asarray(node.keys, np.float32)
+        pos = np.flatnonzero(ks == np.float32(key))
+        if pos.size == 0:
+            return False
+        i = int(pos[0])
+        node.keys.pop(i)
+        node.ptrs.pop(i)
+        self.io.node_writes += 1
+        self.num_keys -= 1
+        return True
+
+    # -- storage accounting --------------------------------------------------------
+
+    def _count_nodes(self) -> tuple[int, int]:
+        leaves = internals = 0
+        stack = [self.root]
+        while stack:
+            n = stack.pop()
+            if n.leaf:
+                leaves += 1
+            else:
+                internals += 1
+                stack.extend(n.children)
+        return leaves, internals
+
+    def nbytes(self) -> int:
+        """Key + pointer bytes across all nodes (float32 key, int64 tid/child)."""
+        leaves, internals = self._count_nodes()
+        total = 0
+        stack = [self.root]
+        while stack:
+            n = stack.pop()
+            total += len(n.keys) * 4
+            total += len(n.ptrs) * 8 if n.leaf else len(n.children) * 8
+            total += 16  # header
+            if not n.leaf:
+                stack.extend(n.children)
+        return total

@@ -1,0 +1,19 @@
+"""Sequential scan baseline — zero index storage, Card inspection cost."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class FullScan:
+    @staticmethod
+    def search(keys: jnp.ndarray, valid: jnp.ndarray, lo, hi):
+        v = keys.astype(jnp.float32)
+        qual = valid & (v >= lo) & (v <= hi)
+        return qual.sum(dtype=jnp.int32), jnp.int32(keys.shape[0])
+
+    @staticmethod
+    def nbytes() -> int:
+        return 0

@@ -1,0 +1,47 @@
+"""Min-max sparse index baseline (BRIN / Zone Map, §8 "Sparse Index
+Structures").
+
+Stores per page-range only (min, max) of the key. On unordered attributes the
+ranges cover nearly the whole domain, so most predicates overlap most ranges —
+the failure mode Hippo's histogram summaries fix (§1, §8). Pure jnp.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class MinMaxIndex:
+    pages_per_range: int
+    mins: jnp.ndarray  # (R,)
+    maxs: jnp.ndarray  # (R,)
+
+    @staticmethod
+    def build(keys: jnp.ndarray, valid: jnp.ndarray, pages_per_range: int = 1
+              ) -> "MinMaxIndex":
+        num_pages = keys.shape[0]
+        r = (num_pages + pages_per_range - 1) // pages_per_range
+        pad = r * pages_per_range - num_pages
+        k = jnp.pad(keys.astype(jnp.float32), ((0, pad), (0, 0)))
+        v = jnp.pad(valid, ((0, pad), (0, 0)))
+        k = k.reshape(r, -1)
+        v = v.reshape(r, -1)
+        mins = jnp.where(v, k, jnp.inf).min(axis=1)
+        maxs = jnp.where(v, k, -jnp.inf).max(axis=1)
+        return MinMaxIndex(pages_per_range=pages_per_range, mins=mins, maxs=maxs)
+
+    def search(self, keys: jnp.ndarray, valid: jnp.ndarray, lo, hi):
+        """Returns (count, pages_inspected) for predicate [lo, hi]."""
+        num_pages = keys.shape[0]
+        overlap = (self.mins <= hi) & (self.maxs >= lo)          # (R,)
+        page_mask = jnp.repeat(overlap, self.pages_per_range)[:num_pages]
+        v = keys.astype(jnp.float32)
+        qual = page_mask[:, None] & valid & (v >= lo) & (v <= hi)
+        return qual.sum(dtype=jnp.int32), page_mask.sum(dtype=jnp.int32)
+
+    def nbytes(self) -> int:
+        return int(self.mins.shape[0]) * 8  # two float32 per range

@@ -1,0 +1,132 @@
+"""Packed bitmap primitives for Hippo partial histograms.
+
+The paper stores each partial histogram as a compressed bitmap over the H
+buckets of the complete histogram (§2, §4.2). On TPU we keep bitmaps as
+fixed-width packed ``uint32`` word arrays — lane-parallel AND/OR on the VPU is
+the hardware-native form of the paper's "bit-level parallelism" (§3.2).
+RLE compression is applied only at the serialization boundary (see
+``rle_compress``/``rle_decompress``), mirroring WAH-style on-disk compression.
+
+All functions are pure jnp and jit-safe; shapes are static.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+WORD_BITS = 32
+
+
+def num_words(num_bits: int) -> int:
+    """Words needed to hold ``num_bits`` bits."""
+    return (num_bits + WORD_BITS - 1) // WORD_BITS
+
+
+def zeros(num_bits: int, *leading) -> jnp.ndarray:
+    """An all-zero packed bitmap with optional leading batch dims."""
+    return jnp.zeros((*leading, num_words(num_bits)), dtype=jnp.uint32)
+
+
+def set_bit(bm: jnp.ndarray, idx) -> jnp.ndarray:
+    """Set bit ``idx`` (scalar) in the trailing word axis of ``bm``."""
+    word = idx // WORD_BITS
+    bit = jnp.uint32(idx % WORD_BITS)
+    return bm.at[..., word].set(bm[..., word] | (jnp.uint32(1) << bit))
+
+
+def get_bit(bm: jnp.ndarray, idx) -> jnp.ndarray:
+    word = idx // WORD_BITS
+    bit = jnp.uint32(idx % WORD_BITS)
+    return (bm[..., word] >> bit) & jnp.uint32(1)
+
+
+def from_bool(bits: jnp.ndarray) -> jnp.ndarray:
+    """Pack a (..., H) boolean array into (..., ceil(H/32)) uint32 words.
+
+    Bit ``b`` of word ``w`` corresponds to bucket ``w*32 + b``.
+    """
+    h = bits.shape[-1]
+    w = num_words(h)
+    pad = w * WORD_BITS - h
+    if pad:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros((*bits.shape[:-1], pad), dtype=bits.dtype)], axis=-1
+        )
+    bits = bits.reshape(*bits.shape[:-1], w, WORD_BITS).astype(jnp.uint32)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    return (bits << shifts).sum(axis=-1, dtype=jnp.uint32)
+
+
+def to_bool(bm: jnp.ndarray, num_bits: int) -> jnp.ndarray:
+    """Unpack (..., W) words to a (..., num_bits) boolean array."""
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = (bm[..., :, None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(*bm.shape[:-1], bm.shape[-1] * WORD_BITS)
+    return bits[..., :num_bits].astype(bool)
+
+
+def popcount(bm: jnp.ndarray) -> jnp.ndarray:
+    """Per-bitmap population count over the trailing word axis (int32)."""
+    x = bm
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    x = (x * jnp.uint32(0x01010101)) >> 24
+    return x.astype(jnp.int32).sum(axis=-1)
+
+
+def density(bm: jnp.ndarray, num_bits: int) -> jnp.ndarray:
+    """Partial histogram density (§4.3): kept buckets / total buckets."""
+    return popcount(bm).astype(jnp.float32) / jnp.float32(num_bits)
+
+
+def any_joint(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """True where bitmaps share at least one set bit (joint buckets, §3.2).
+
+    Broadcasts over leading dims; reduces the trailing word axis.
+    """
+    return jnp.any((a & b) != 0, axis=-1)
+
+
+def union(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return a | b
+
+
+def range_mask(num_bits: int, lo, hi) -> jnp.ndarray:
+    """Packed bitmap with bits [lo, hi] (inclusive) set. lo/hi may be traced."""
+    idx = jnp.arange(num_words(num_bits) * WORD_BITS, dtype=jnp.int32)
+    bits = (idx >= lo) & (idx <= hi) & (idx < num_bits)
+    return from_bool(bits)
+
+
+# ---------------------------------------------------------------------------
+# Serialization-boundary compression (host-side numpy; mirrors the paper's
+# compressed on-disk bitmap format).
+# ---------------------------------------------------------------------------
+
+def rle_compress(words: np.ndarray) -> np.ndarray:
+    """Simple word-level RLE: runs of identical words -> (count, word) pairs.
+
+    Operates on a 1-D uint32 word array (one bitmap, or a flattened batch).
+    Returns a 1-D uint32 array of interleaved (count, word) pairs.
+    """
+    words = np.asarray(words, dtype=np.uint32).ravel()
+    if words.size == 0:
+        return np.zeros((0,), dtype=np.uint32)
+    change = np.flatnonzero(np.diff(words)) + 1
+    starts = np.concatenate([[0], change])
+    ends = np.concatenate([change, [words.size]])
+    counts = (ends - starts).astype(np.uint32)
+    vals = words[starts]
+    return np.stack([counts, vals], axis=1).ravel()
+
+
+def rle_decompress(pairs: np.ndarray) -> np.ndarray:
+    pairs = np.asarray(pairs, dtype=np.uint32).reshape(-1, 2)
+    return np.repeat(pairs[:, 1], pairs[:, 0])
+
+
+def compressed_nbytes(words: np.ndarray) -> int:
+    """Size in bytes of the RLE-compressed form (paper's storage metric)."""
+    return int(rle_compress(words).nbytes)

@@ -1,0 +1,160 @@
+"""High-level Hippo index API — the paper's CREATE INDEX / SELECT / INSERT /
+DELETE / VACUUM surface (§7.1), wrapping the functional core.
+
+    table = PagedTable.from_values(values, page_card=50)
+    idx = HippoIndex.create(table, resolution=400, density=0.2)
+    res = idx.search(Predicate.between(1000, 2000))
+    idx.insert(1234.0)                  # eager (Algorithm 3)
+    table.delete_where(500, 600)        # marks pages dirty
+    idx.vacuum()                        # lazy re-summarize (§5.2)
+
+The wrapper owns the host-side table handle plus the device ``HippoState`` and
+keeps simple maintenance counters (entries touched, bytes written) used by the
+maintenance benchmarks as the I/O-cost metric.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import histogram as hg
+from repro.core import index as hix
+from repro.core.predicate import Predicate, to_bucket_bitmap
+from repro.storage.table import PagedTable
+
+
+@dataclass
+class MaintenanceCounters:
+    inserts: int = 0
+    entries_touched: int = 0
+    entries_created: int = 0
+    vacuums: int = 0
+    entries_resummarized: int = 0
+
+
+@dataclass
+class HippoIndex:
+    cfg: hix.HippoConfig
+    state: hix.HippoState
+    table: PagedTable
+    counters: MaintenanceCounters = field(default_factory=MaintenanceCounters)
+
+    # -- creation ------------------------------------------------------------
+
+    @staticmethod
+    def create(table: PagedTable, resolution: int = 400, density: float = 0.2,
+               max_slots: int | None = None, sample_size: int = 65536,
+               relocate_on_update: bool = True, hist: hg.Histogram | None = None,
+               ) -> "HippoIndex":
+        """CREATE INDEX ... USING hippo(attr). Builds the complete histogram
+        from a table sample (the DBMS-maintained histogram, §4.1), then runs
+        Algorithm 2."""
+        if max_slots is None:
+            # worst case one entry per page, plus an update budget
+            max_slots = int(table.num_pages * 1.25) + 1024
+        cfg = hix.HippoConfig(resolution=resolution, density=density,
+                              page_card=table.page_card, max_slots=max_slots,
+                              relocate_on_update=relocate_on_update)
+        if hist is None:
+            live = table.keys[: table.num_pages][table.valid[: table.num_pages]]
+            if live.size > sample_size:
+                rng = np.random.default_rng(0)
+                live = rng.choice(live, size=sample_size, replace=False)
+            hist = hg.build(jnp.asarray(live), resolution)
+        state = hix.build(cfg, hist, table.device_keys(), table.device_valid())
+        return HippoIndex(cfg=cfg, state=state, table=table)
+
+    # -- query (Algorithm 1) ---------------------------------------------------
+
+    def search(self, pred: Predicate) -> hix.SearchResult:
+        qbm = to_bucket_bitmap(pred, self.state.histogram)
+        return hix.search(self.state, qbm, self.table.device_keys(),
+                          self.table.device_valid(),
+                          jnp.float32(max(pred.lo, -3.4e38)),
+                          jnp.float32(min(pred.hi, 3.4e38)))
+
+    def search_compact(self, pred: Predicate, max_selected: int | None = None):
+        """Gather-path search. Returns (count, pages_inspected, truncated)."""
+        qbm = to_bucket_bitmap(pred, self.state.histogram)
+        if max_selected is None:
+            max_selected = self.table.num_pages
+        return hix.search_compact(self.state, qbm, self.table.device_keys(),
+                                  self.table.device_valid(),
+                                  jnp.float32(max(pred.lo, -3.4e38)),
+                                  jnp.float32(min(pred.hi, 3.4e38)),
+                                  max_selected=max_selected)
+
+    # -- maintenance -----------------------------------------------------------
+
+    def insert(self, value: float) -> None:
+        """Eager single-tuple insert: table append + Algorithm 3 update."""
+        page_id, _ = self.table.insert(value)
+        before = int(self.state.num_entries)
+        self.state = hix.insert_tuple(self.cfg, self.state, jnp.float32(value),
+                                      jnp.int32(page_id))
+        self.counters.inserts += 1
+        self.counters.entries_touched += 1
+        self.counters.entries_created += int(self.state.num_entries) - before
+
+    def insert_batch(self, values: np.ndarray) -> None:
+        """Vectorized insert (beyond-paper fast path).
+
+        Tuples landing on already-summarized pages take one fused scatter;
+        tuples opening new pages replay the eager path (they are few: at most
+        one page per page_card tuples).
+        """
+        values = np.asarray(values, np.float32).ravel()
+        pages = []
+        for v in values:
+            pid, _ = self.table.insert(float(v))
+            pages.append(pid)
+        pages = np.asarray(pages, np.int32)
+        old_mask = pages <= int(self.state.summarized_until)
+        if old_mask.any():
+            # full batch passed with a mask => one stable jit shape per N
+            self.state = hix.insert_batch_existing(
+                self.cfg, self.state, jnp.asarray(values),
+                jnp.asarray(pages), jnp.asarray(old_mask))
+        for v, p in zip(values[~old_mask], pages[~old_mask]):
+            self.state = hix.insert_tuple(self.cfg, self.state, jnp.float32(v),
+                                          jnp.int32(p))
+        self.counters.inserts += len(values)
+
+    def vacuum(self) -> int:
+        """Lazy maintenance after deletes (§5.2): re-summarize entries whose
+        ranges contain dirty pages. Returns entries re-summarized."""
+        dirty_pages = np.flatnonzero(self.table.dirty[: self.table.num_pages])
+        if dirty_pages.size == 0:
+            return 0
+        s = self.cfg.max_slots
+        affected = np.zeros((s,), bool)
+        for p in dirty_pages:
+            slot, _ = hix.locate_slot(self.state, jnp.int32(int(p)))
+            affected[int(slot)] = True
+        self.state = hix.resummarize_slots(
+            self.cfg, self.state, self.table.device_keys(),
+            self.table.device_valid(), jnp.asarray(affected))
+        self.table.clear_dirty(dirty_pages)
+        n = int(affected.sum())
+        self.counters.vacuums += 1
+        self.counters.entries_resummarized += n
+        return n
+
+    # -- introspection ----------------------------------------------------------
+
+    @property
+    def num_entries(self) -> int:
+        return int(self.state.num_entries)
+
+    def nbytes(self, compressed: bool = False) -> int:
+        return hix.index_nbytes(self.cfg, self.state, compressed=compressed)
+
+    def entries_host(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(starts, ends, bitmaps) of live entries in logical order."""
+        order = np.asarray(self.state.sorted_order)[: self.num_entries]
+        return (np.asarray(self.state.starts)[order],
+                np.asarray(self.state.ends)[order],
+                np.asarray(self.state.bitmaps)[order])

@@ -1,0 +1,94 @@
+"""Complete height-balanced (equi-depth) histogram (§4.1).
+
+PostgreSQL maintains an equi-depth histogram per attribute; Hippo retrieves it
+and keeps it on disk (§7.1). Here we build it explicitly from a sample of the
+indexed attribute and keep the bucket *boundaries* as a device array.
+
+Bucket convention: ``H`` buckets with boundaries ``bounds`` of shape (H+1,).
+Bucket ``i`` covers the half-open interval [bounds[i], bounds[i+1]) except the
+last bucket, which is closed on the right. ``bucketize`` maps values to bucket
+ids in [0, H-1]; out-of-range values clamp to the edge buckets (a new tuple
+beyond the observed range still hits the edge bucket, matching the paper's
+assumption that the complete histogram is never rebuilt on local updates, §4.1).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class Histogram:
+    """Equi-depth complete histogram: H buckets, boundaries (H+1,) float32."""
+
+    bounds: jnp.ndarray
+
+    @property
+    def resolution(self) -> int:  # H, the paper's histogram resolution
+        return self.bounds.shape[0] - 1
+
+    def tree_flatten(self):
+        return (self.bounds,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def build(sample: jnp.ndarray, resolution: int) -> Histogram:
+    """Build an equi-depth histogram with ``resolution`` buckets from a sample.
+
+    Boundaries are the (i/H)-quantiles of the sample. Duplicate boundaries are
+    nudged apart so every bucket is non-degenerate (ties happen on low-
+    cardinality integer attributes).
+    """
+    sample = jnp.asarray(sample, jnp.float32).ravel()
+    qs = jnp.linspace(0.0, 1.0, resolution + 1)
+    bounds = jnp.quantile(sample, qs)
+    # Enforce strict monotonicity: cumulative-max then epsilon-separate ties.
+    bounds = jax.lax.cummax(bounds)
+    span = jnp.maximum(bounds[-1] - bounds[0], 1.0)
+    eps = span * 1e-6
+    steps = jnp.arange(resolution + 1, dtype=jnp.float32) * eps
+    return Histogram(bounds=(bounds + steps).astype(jnp.float32))
+
+
+def build_uniform(lo: float, hi: float, resolution: int) -> Histogram:
+    """Histogram for a known-uniform attribute (TPC-H partkey is uniform)."""
+    return Histogram(bounds=jnp.linspace(lo, hi, resolution + 1, dtype=jnp.float32))
+
+
+@partial(jax.jit, static_argnames=())
+def bucketize(hist: Histogram, values: jnp.ndarray) -> jnp.ndarray:
+    """Map values to bucket ids in [0, H-1] (binary search, §4.2).
+
+    ``jnp.searchsorted`` on the boundary array is the vectorized form of the
+    paper's per-tuple binary search. The Pallas kernel
+    ``repro.kernels.bucketize`` provides the tiled TPU version; this is the
+    canonical jnp path (also its oracle).
+    """
+    h = hist.resolution
+    ids = jnp.searchsorted(hist.bounds, values.astype(jnp.float32), side="right") - 1
+    return jnp.clip(ids, 0, h - 1).astype(jnp.int32)
+
+
+def hit_bucket_range(hist: Histogram, lo, hi) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Bucket-id interval [b_lo, b_hi] hit by a range predicate [lo, hi].
+
+    A bucket is *hit* if the predicate fully contains, overlaps, or is fully
+    contained by the bucket (§3.1). For an interval predicate against sorted
+    boundaries this is exactly the buckets of the two endpoints.
+    """
+    b_lo = bucketize(hist, jnp.asarray(lo, jnp.float32)[None])[0]
+    b_hi = bucketize(hist, jnp.asarray(hi, jnp.float32)[None])[0]
+    return b_lo, b_hi
+
+
+def host_bounds(hist: Histogram) -> np.ndarray:
+    return np.asarray(hist.bounds)

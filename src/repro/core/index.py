@@ -1,0 +1,364 @@
+"""Hippo index — structure, build, search, and maintenance (§2–§5).
+
+State layout (fixed-shape device arrays, functional updates):
+
+  bitmaps   (S, W) uint32  partial histograms in packed bitmap form (physical slots)
+  starts    (S,)   int32   first page summarized by each slot
+  ends      (S,)   int32   last page summarized by each slot (inclusive)
+  sorted_order (S,) int32  logical (page-ascending) position -> physical slot;
+                           this is the paper's *index entries sorted list* (§5.3)
+  slot_live (S,)   bool    false for slots abandoned by out-of-place updates
+  num_entries      int32   logical entry count
+  num_slots        int32   physical slots in use (>= num_entries with relocation)
+  summarized_until int32   last page id covered by the index (-1 if empty)
+
+Static config (``HippoConfig``) carries H (resolution), D (density threshold),
+page_card, and capacity; it is hashable and passed as a static argument.
+
+Out-of-place updates: the paper relocates an updated entry to the end of the
+index when its compressed bitmap no longer fits (§5.1). Fixed-width device
+slots always fit, so relocation is **optional** here (``relocate_on_update``);
+enabling it exercises the sorted-list indirection exactly as in Fig. 4.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitmap as bm
+from repro.core import grouping
+from repro.core.histogram import Histogram, bucketize
+from repro.core.predicate import Predicate, to_bucket_bitmap
+
+_INT32_MAX = np.iinfo(np.int32).max
+
+
+@dataclass(frozen=True)
+class HippoConfig:
+    resolution: int = 400          # H — complete histogram resolution (default, §7)
+    density: float = 0.2           # D — partial histogram density threshold (default, §7)
+    page_card: int = 50            # tuples per page (paper's running example)
+    max_slots: int = 1 << 14       # physical entry capacity
+    relocate_on_update: bool = True  # model §5.1 out-of-place updates
+
+    @property
+    def words(self) -> int:
+        return bm.num_words(self.resolution)
+
+
+class HippoState(NamedTuple):
+    bounds: jnp.ndarray        # (H+1,) f32 — complete histogram boundaries
+    bitmaps: jnp.ndarray       # (S, W) u32
+    starts: jnp.ndarray        # (S,) i32
+    ends: jnp.ndarray          # (S,) i32
+    sorted_order: jnp.ndarray  # (S,) i32
+    slot_live: jnp.ndarray     # (S,) bool
+    num_entries: jnp.ndarray   # i32 scalar
+    num_slots: jnp.ndarray     # i32 scalar
+    summarized_until: jnp.ndarray  # i32 scalar
+
+    @property
+    def histogram(self) -> Histogram:
+        return Histogram(self.bounds)
+
+
+class SearchResult(NamedTuple):
+    count: jnp.ndarray            # qualified tuple count
+    qualified: jnp.ndarray        # (num_pages, page_card) bool — exact matches
+    page_mask: jnp.ndarray        # (num_pages,) bool — possible qualified pages
+    pages_inspected: jnp.ndarray  # scalar i32 (the paper's I/O metric)
+    entries_matched: jnp.ndarray  # scalar i32
+
+
+# ---------------------------------------------------------------------------
+# Build (§4, Algorithm 2)
+# ---------------------------------------------------------------------------
+
+def build(cfg: HippoConfig, hist: Histogram, keys: jnp.ndarray,
+          valid: jnp.ndarray) -> HippoState:
+    """Initialize Hippo over a paged key column.
+
+    Device work: bucketize + grouping scan (jit). Entry extraction is a cheap
+    host finalize. Returns a fixed-capacity ``HippoState``.
+    """
+    num_pages = keys.shape[0]
+    page_bits = grouping.page_bucket_bits(hist, keys, valid, cfg.resolution)
+    flags, merged = grouping.group_pages(page_bits, cfg.resolution, cfg.density)
+    starts, ends, packed = grouping.finalize_entries(np.asarray(flags), np.asarray(merged))
+    e = starts.shape[0]
+    if e > cfg.max_slots:
+        raise ValueError(f"built {e} entries > max_slots {cfg.max_slots}; raise capacity")
+    s, w = cfg.max_slots, cfg.words
+
+    bitmaps = np.zeros((s, w), np.uint32)
+    bitmaps[:e] = packed
+    st = np.full((s,), _INT32_MAX, np.int32)
+    st[:e] = starts
+    en = np.full((s,), _INT32_MAX, np.int32)
+    en[:e] = ends
+    order = np.arange(s, dtype=np.int32)   # build order is page order (§5.3 init)
+    live = np.zeros((s,), bool)
+    live[:e] = True
+    return HippoState(
+        bounds=hist.bounds,
+        bitmaps=jnp.asarray(bitmaps),
+        starts=jnp.asarray(st),
+        ends=jnp.asarray(en),
+        sorted_order=jnp.asarray(order),
+        slot_live=jnp.asarray(live),
+        num_entries=jnp.int32(e),
+        num_slots=jnp.int32(e),
+        summarized_until=jnp.int32(num_pages - 1 if e else -1),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Search (§3, Algorithm 1)
+# ---------------------------------------------------------------------------
+
+def _logical_starts(state: HippoState) -> jnp.ndarray:
+    """starts in logical (sorted-list) order, padded with INT32_MAX."""
+    s = state.sorted_order.shape[0]
+    pos = jnp.arange(s, dtype=jnp.int32)
+    starts = state.starts[state.sorted_order]
+    return jnp.where(pos < state.num_entries, starts, _INT32_MAX)
+
+
+def locate_slot(state: HippoState, page_id) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Binary search the sorted list for the entry owning ``page_id`` (§5.3).
+
+    Returns (physical_slot, logical_pos). Caller guarantees the page is
+    summarized (page_id <= summarized_until).
+    """
+    ls = _logical_starts(state)
+    pos = jnp.searchsorted(ls, page_id, side="right").astype(jnp.int32) - 1
+    pos = jnp.clip(pos, 0, None)
+    return state.sorted_order[pos], pos
+
+
+@partial(jax.jit, static_argnames=())
+def search(state: HippoState, query_bitmap: jnp.ndarray, keys: jnp.ndarray,
+           valid: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray) -> SearchResult:
+    """Algorithm 1: filter false positives by bitmap AND, inspect the rest.
+
+    keys/valid: (num_pages, page_card) device views of the table.
+    lo/hi: the predicate interval for exact inspection (step 3).
+    """
+    num_pages = keys.shape[0]
+    s = state.bitmaps.shape[0]
+    live = state.slot_live & (jnp.arange(s) < state.num_slots)
+    # Step 2 — bit-level parallel joint-bucket test (Fig. 3).
+    match = bm.any_joint(state.bitmaps, query_bitmap[None, :]) & live
+    # Expand matched page ranges to a page bitmap (Bitmap b in Alg. 1) via
+    # boundary deltas + prefix sum (entries partition the page space).
+    delta = jnp.zeros((num_pages + 1,), jnp.int32)
+    delta = delta.at[jnp.clip(state.starts, 0, num_pages)].add(match.astype(jnp.int32), mode="drop")
+    delta = delta.at[jnp.clip(state.ends + 1, 0, num_pages)].add(-match.astype(jnp.int32), mode="drop")
+    page_mask = jnp.cumsum(delta[:num_pages]) > 0
+    # Step 3 — inspect possible qualified pages tuple-by-tuple (vectorized).
+    v = keys.astype(jnp.float32)
+    qualified = page_mask[:, None] & valid & (v >= lo) & (v <= hi)
+    return SearchResult(
+        count=qualified.sum(dtype=jnp.int32),
+        qualified=qualified,
+        page_mask=page_mask,
+        pages_inspected=page_mask.sum(dtype=jnp.int32),
+        entries_matched=match.sum(dtype=jnp.int32),
+    )
+
+
+@partial(jax.jit, static_argnames=("max_selected",))
+def search_compact(state: HippoState, query_bitmap: jnp.ndarray, keys: jnp.ndarray,
+                   valid: jnp.ndarray, lo, hi, max_selected: int):
+    """Gather-then-inspect variant: touches only selected pages (TPU I/O model).
+
+    Work after filtering is proportional to ``max_selected`` pages — the
+    accelerator analogue of "only read possible qualified pages from disk".
+    Returns (count, pages_inspected, truncated); if ``truncated`` is true the
+    selection overflowed ``max_selected`` and the caller must fall back to the
+    dense path (the count would otherwise be incomplete).
+    """
+    num_pages = keys.shape[0]
+    s = state.bitmaps.shape[0]
+    live = state.slot_live & (jnp.arange(s) < state.num_slots)
+    match = bm.any_joint(state.bitmaps, query_bitmap[None, :]) & live
+    delta = jnp.zeros((num_pages + 1,), jnp.int32)
+    delta = delta.at[jnp.clip(state.starts, 0, num_pages)].add(match.astype(jnp.int32), mode="drop")
+    delta = delta.at[jnp.clip(state.ends + 1, 0, num_pages)].add(-match.astype(jnp.int32), mode="drop")
+    page_mask = jnp.cumsum(delta[:num_pages]) > 0
+    n_sel = page_mask.sum(dtype=jnp.int32)
+    sel = jnp.nonzero(page_mask, size=max_selected, fill_value=num_pages)[0]
+    in_range = sel < num_pages
+    pk = jnp.where(in_range[:, None], keys.at[sel].get(mode="fill", fill_value=0.0), 0.0)
+    pv = valid.at[sel].get(mode="fill", fill_value=False) & in_range[:, None]
+    qual = pv & (pk.astype(jnp.float32) >= lo) & (pk.astype(jnp.float32) <= hi)
+    return qual.sum(dtype=jnp.int32), n_sel, n_sel > max_selected
+
+
+# ---------------------------------------------------------------------------
+# Maintenance — eager insert (§5.1, Algorithm 3)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("cfg",))
+def insert_tuple(cfg: HippoConfig, state: HippoState, value: jnp.ndarray,
+                 page_id: jnp.ndarray) -> HippoState:
+    """Algorithm 3: eager single-tuple index update.
+
+    Steps: (1) bucketize the new value; (2) locate the owning entry via the
+    sorted list; (3) set the bucket bit / extend the last entry / open a new
+    entry, per the density rule.
+    """
+    hist = Histogram(state.bounds)
+    b = bucketize(hist, value[None])[0]
+    word = b // 32
+    bit = jnp.uint32(1) << jnp.uint32(b % 32)
+    is_new_page = page_id > state.summarized_until
+
+    def existing_page(st: HippoState) -> HippoState:
+        slot, pos = locate_slot(st, page_id)
+        old_word = st.bitmaps[slot, word]
+        new_word = old_word | bit
+        changed = new_word != old_word
+
+        def in_place(st: HippoState) -> HippoState:
+            return st._replace(bitmaps=st.bitmaps.at[slot, word].set(new_word))
+
+        def relocate(st: HippoState) -> HippoState:
+            # §5.1: updated entry may not fit its old slot -> append a new
+            # physical entry at the end, fix the sorted list pointer (Fig. 4).
+            new_slot = st.num_slots
+            bitmaps = st.bitmaps.at[new_slot].set(st.bitmaps[slot]).at[new_slot, word].set(new_word)
+            return st._replace(
+                bitmaps=bitmaps,
+                starts=st.starts.at[new_slot].set(st.starts[slot]),
+                ends=st.ends.at[new_slot].set(st.ends[slot]),
+                slot_live=st.slot_live.at[slot].set(False).at[new_slot].set(True),
+                sorted_order=st.sorted_order.at[pos].set(new_slot),
+                num_slots=st.num_slots + 1,
+            )
+
+        if cfg.relocate_on_update:
+            return jax.lax.cond(changed, relocate, lambda s: s, st)
+        return jax.lax.cond(changed, in_place, lambda s: s, st)
+
+    def new_page(st: HippoState) -> HippoState:
+        last_slot = st.sorted_order[jnp.maximum(st.num_entries - 1, 0)]
+        last_density = jnp.where(
+            st.num_entries > 0,
+            bm.density(st.bitmaps[last_slot], cfg.resolution),
+            jnp.float32(2.0),  # empty index -> always create
+        )
+
+        def extend(st: HippoState) -> HippoState:
+            return st._replace(
+                bitmaps=st.bitmaps.at[last_slot, word].set(st.bitmaps[last_slot, word] | bit),
+                ends=st.ends.at[last_slot].set(page_id),
+                summarized_until=page_id,
+            )
+
+        def create(st: HippoState) -> HippoState:
+            slot = st.num_slots
+            zero = jnp.zeros((cfg.words,), jnp.uint32).at[word].set(bit)
+            return st._replace(
+                bitmaps=st.bitmaps.at[slot].set(zero),
+                starts=st.starts.at[slot].set(page_id),
+                ends=st.ends.at[slot].set(page_id),
+                slot_live=st.slot_live.at[slot].set(True),
+                sorted_order=st.sorted_order.at[st.num_entries].set(slot),
+                num_entries=st.num_entries + 1,
+                num_slots=st.num_slots + 1,
+                summarized_until=page_id,
+            )
+
+        return jax.lax.cond(last_density < cfg.density, extend, create, st)
+
+    return jax.lax.cond(is_new_page, new_page, existing_page, state)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def insert_batch_existing(cfg: HippoConfig, state: HippoState, values: jnp.ndarray,
+                          page_ids: jnp.ndarray, mask: jnp.ndarray) -> HippoState:
+    """Vectorized eager update for tuples landing on already-summarized pages.
+
+    Beyond-paper fast path: bucketize all values, locate all owning slots with
+    one vectorized sorted-list binary search, and OR the new bits in via a
+    segment reduction. Semantically identical to repeated ``insert_tuple``
+    (modulo physical relocation, which fixed-width slots make unnecessary).
+
+    ``mask`` selects the tuples to apply (shape-stable: callers pass the full
+    batch each time; masked-out tuples route to a dropped segment).
+    """
+    hist = Histogram(state.bounds)
+    ids = bucketize(hist, values)                      # (N,)
+    slots, _ = jax.vmap(lambda p: locate_slot(state, p))(page_ids)
+    slots = jnp.where(mask, slots, cfg.max_slots)      # dropped by segment_max
+    onehot = jax.nn.one_hot(ids, cfg.resolution, dtype=jnp.int32)  # (N, H)
+    agg = jax.ops.segment_max(onehot, slots,
+                              num_segments=cfg.max_slots + 1) > 0
+    packed = bm.from_bool(agg[: cfg.max_slots])
+    return state._replace(bitmaps=state.bitmaps | packed)
+
+
+# ---------------------------------------------------------------------------
+# Maintenance — lazy delete / vacuum (§5.2)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("cfg",))
+def resummarize_slots(cfg: HippoConfig, state: HippoState, keys: jnp.ndarray,
+                      valid: jnp.ndarray, affected: jnp.ndarray) -> HippoState:
+    """Re-summarize the page ranges of ``affected`` slots (vacuum, §5.2).
+
+    The refreshed bitmap can only lose bits, so the update is in place and the
+    sorted list is untouched (paper's observation). ``affected``: (S,) bool.
+    """
+    num_pages = keys.shape[0]
+    hist = Histogram(state.bounds)
+    page_bits = grouping.page_bucket_bits(hist, keys, valid, cfg.resolution)  # (P, H)
+    # entry-of-page for affected slots via boundary deltas over live slots.
+    s = state.bitmaps.shape[0]
+    live = state.slot_live & (jnp.arange(s) < state.num_slots) & affected
+    # Map each page to its owning affected slot (or S = "none").
+    seg = jnp.full((num_pages,), s, jnp.int32)
+    # scatter slot id at starts, then forward-fill within [start, end].
+    slot_ids = jnp.arange(s, dtype=jnp.int32)
+    start_marks = jnp.full((num_pages,), -1, jnp.int32)
+    start_marks = start_marks.at[jnp.clip(state.starts, 0, num_pages - 1)].max(
+        jnp.where(live, slot_ids, -1), mode="drop")
+    filled = jax.lax.associative_scan(jnp.maximum, start_marks)
+    ends_of = jnp.where(filled >= 0, state.ends[jnp.clip(filled, 0, s - 1)], -1)
+    in_range = (filled >= 0) & (jnp.arange(num_pages) <= ends_of)
+    seg = jnp.where(in_range, filled, s)
+    agg = jax.ops.segment_max(page_bits.astype(jnp.int32), seg,
+                              num_segments=s + 1) > 0          # (S+1, H)
+    fresh = bm.from_bool(agg[:s])
+    new_bitmaps = jnp.where(affected[:, None], fresh, state.bitmaps)
+    return state._replace(bitmaps=new_bitmaps)
+
+
+# ---------------------------------------------------------------------------
+# Storage accounting (paper's index-size metric)
+# ---------------------------------------------------------------------------
+
+def index_nbytes(cfg: HippoConfig, state: HippoState, compressed: bool = False) -> int:
+    """Bytes of live index storage: entries (bitmap + 2 page ids) + sorted list.
+
+    ``compressed=True`` reports the serialized RLE form (paper's on-disk
+    compressed bitmaps); the device-resident form is fixed-width words.
+    """
+    e = int(state.num_entries)
+    live = np.asarray(state.slot_live)
+    words = np.asarray(state.bitmaps)[live]
+    if compressed:
+        bitmap_bytes = sum(bm.compressed_nbytes(wrow) for wrow in words)
+    else:
+        bitmap_bytes = words.nbytes
+    page_range_bytes = e * 8          # two int32 page ids per entry
+    sorted_list_bytes = e * 4         # one pointer per entry (§5.3)
+    histogram_bytes = state.bounds.shape[0] * 4
+    return bitmap_bytes + page_range_bytes + sorted_list_bytes + histogram_bytes

@@ -1,0 +1,129 @@
+"""HippoKV — Hippo-style page summaries over a KV cache (beyond-paper).
+
+The paper's structure (page ranges + bucket-bitmap summaries + AND-filter)
+applied to long-context decode: the "table" is the key cache, a "page" is a
+block of ``page_size`` consecutive cache positions, and the indexed
+"attribute" is the key's projection onto a set of quantized directions.
+
+Summaries: for each page and each feature channel c (a learned/PCA projection
+of keys; here the top-``num_channels`` key dims by variance), an equi-depth
+histogram over the channel's values is built and the page's bitmap marks the
+buckets present. At decode time the query selects, per channel, the buckets
+whose values could produce a large |q_c * k_c| contribution (the outermost
+buckets in the direction of sign(q_c)); pages whose bitmaps miss all selected
+buckets in every channel are pruned — Quest-style upper-bound pruning, with
+the paper's bitmap machinery instead of min/max.
+
+Unlike the paper's exact-predicate use, KV pruning is APPROXIMATE (dropping a
+page drops its softmax mass). ``hippo_kv_attention`` therefore exposes the
+kept-mass diagnostics and the repo keeps exact attention as the default
+(DESIGN.md §3); tests bound the output error against full attention.
+
+Applicability: attention-bearing archs only — rwkv6 has no KV cache and
+recurrentgemma's local window is already O(window) (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitmap as bm
+
+
+@dataclass(frozen=True)
+class KVIndexConfig:
+    page_size: int = 64          # cache positions per summarized page
+    num_channels: int = 8        # key channels summarized per head
+    resolution: int = 16         # histogram buckets per channel
+    keep_buckets: int = 4        # query-side: outermost buckets selected
+
+
+class KVIndex:
+    """Per-(batch, head) page summaries of a key cache."""
+
+    def __init__(self, cfg: KVIndexConfig, channels: jnp.ndarray,
+                 bounds: jnp.ndarray, bitmaps: jnp.ndarray):
+        self.cfg = cfg
+        self.channels = channels   # (C,) int32 — key dims summarized
+        self.bounds = bounds       # (C, R+1) f32 — per-channel bucket bounds
+        self.bitmaps = bitmaps     # (B, H, P, C, W) uint32 — page summaries
+
+    @property
+    def num_pages(self) -> int:
+        return self.bitmaps.shape[2]
+
+    def nbytes(self) -> int:
+        return int(self.bitmaps.size) * 4 + int(self.bounds.size) * 4
+
+
+def build_kv_index(cfg: KVIndexConfig, keys: jnp.ndarray) -> KVIndex:
+    """keys: (B, S, H, hd) with S % page_size == 0."""
+    b, s, h, hd = keys.shape
+    p = s // cfg.page_size
+    kf = keys.astype(jnp.float32)
+    # pick the highest-variance key dims as summary channels (host-static)
+    var = kf.reshape(-1, hd).var(axis=0)
+    channels = jnp.argsort(-var)[: cfg.num_channels].astype(jnp.int32)
+    sel = kf[..., channels]                              # (B, S, H, C)
+    # equi-depth bounds per channel (global across the cache)
+    qs = jnp.linspace(0.0, 1.0, cfg.resolution + 1)
+    bounds = jnp.quantile(sel.reshape(-1, cfg.num_channels), qs, axis=0).T
+    eps = (bounds[:, -1:] - bounds[:, :1] + 1.0) * 1e-6
+    bounds = bounds + jnp.arange(cfg.resolution + 1) * eps  # strict monotone
+    # bucketize + per-page bitmaps
+    ids = jax.vmap(lambda v, bd: jnp.clip(
+        jnp.searchsorted(bd, v, side="right") - 1, 0, cfg.resolution - 1),
+        in_axes=(-1, 0), out_axes=-1)(sel, bounds)       # (B, S, H, C)
+    ids = ids.reshape(b, p, cfg.page_size, h, cfg.num_channels)
+    onehot = jax.nn.one_hot(ids, cfg.resolution, dtype=bool)  # (B,P,ps,H,C,R)
+    page_bits = onehot.any(axis=2)                       # (B, P, H, C, R)
+    bitmaps = bm.from_bool(page_bits).transpose(0, 2, 1, 3, 4)  # (B,H,P,C,W)
+    return KVIndex(cfg, channels, bounds, bitmaps)
+
+
+def query_page_mask(index: KVIndex, q: jnp.ndarray,
+                    min_channels: int = 1) -> jnp.ndarray:
+    """q: (B, H, hd) single decode query -> (B, H, P) bool pages to keep.
+
+    Per channel, select the ``keep_buckets`` outermost buckets in the
+    direction of sign(q_c) (largest |q_c*k_c| upper bound); a page survives
+    if at least ``min_channels`` channels have a joint bucket — Algorithm 1's
+    AND-filter per channel, vote-combined across channels (min_channels=1 is
+    the permissive OR; higher values prune harder).
+    """
+    cfg = index.cfg
+    qc = q.astype(jnp.float32)[..., index.channels]      # (B, H, C)
+    r = cfg.resolution
+    idx = jnp.arange(r)
+    hi_mask = idx >= (r - cfg.keep_buckets)              # top buckets
+    lo_mask = idx < cfg.keep_buckets                     # bottom buckets
+    want_bits = jnp.where(qc[..., None] >= 0, hi_mask, lo_mask)  # (B,H,C,R)
+    want = bm.from_bool(want_bits)                       # (B, H, C, W)
+    joint = bm.any_joint(index.bitmaps, want[:, :, None])  # (B, H, P, C)
+    return joint.sum(axis=-1) >= min_channels            # (B, H, P)
+
+
+@partial(jax.jit, static_argnames=("page_size",))
+def hippo_kv_attention(q: jnp.ndarray, keys: jnp.ndarray, values: jnp.ndarray,
+                       page_mask: jnp.ndarray, page_size: int):
+    """Decode attention over kept pages only (others masked out).
+
+    q: (B, H, hd); keys/values: (B, S, H, hd); page_mask: (B, H, P).
+    Returns (out (B, H, hd), kept_mass (B, H)) where kept_mass is the softmax
+    mass retained vs full attention (diagnostic for the approximation).
+    """
+    b, s, h, hd = keys.shape
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                        keys.astype(jnp.float32)) * scale
+    full = jax.nn.softmax(scores, axis=-1)
+    pos_mask = jnp.repeat(page_mask, page_size, axis=-1)[..., :s]  # (B,H,S)
+    masked = jnp.where(pos_mask, scores, -1e30)
+    probs = jax.nn.softmax(masked, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", probs, values.astype(jnp.float32))
+    kept_mass = (full * pos_mask).sum(axis=-1)
+    return out.astype(q.dtype), kept_mass

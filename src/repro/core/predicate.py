@@ -1,0 +1,80 @@
+"""Query predicates and their conversion to bucket bitmaps (§3.1).
+
+Unit predicates are equality (``attr = v``) and range (``lo <= attr <= hi``);
+conjunctions AND their bucket bitmaps — only buckets hit by *all* units are
+kept (Fig. 2). Every predicate reduces to a closed interval [lo, hi] over the
+attribute, so the converted bitmap is a contiguous run of set bits.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import bitmap as bm
+from repro.core.histogram import Histogram, hit_bucket_range
+
+_INF = float("inf")
+
+
+@dataclass(frozen=True)
+class Predicate:
+    """Closed-interval predicate over the indexed attribute.
+
+    equality(v)    -> lo = hi = v
+    greater(v)     -> lo = nextafter(v), hi = +inf   (strict >)
+    conjunctions   -> intersection of intervals
+    """
+
+    lo: float = -_INF
+    hi: float = _INF
+
+    @staticmethod
+    def equality(v: float) -> "Predicate":
+        return Predicate(lo=float(v), hi=float(v))
+
+    @staticmethod
+    def between(lo: float, hi: float) -> "Predicate":
+        return Predicate(lo=float(lo), hi=float(hi))
+
+    @staticmethod
+    def greater(v: float) -> "Predicate":
+        return Predicate(lo=float(np.nextafter(np.float32(v), np.float32(_INF))), hi=_INF)
+
+    @staticmethod
+    def less(v: float) -> "Predicate":
+        return Predicate(lo=-_INF, hi=float(np.nextafter(np.float32(v), np.float32(-_INF))))
+
+    def and_(self, other: "Predicate") -> "Predicate":
+        return Predicate(lo=max(self.lo, other.lo), hi=min(self.hi, other.hi))
+
+    @property
+    def empty(self) -> bool:
+        return self.lo > self.hi
+
+    def selectivity_interval(self) -> tuple[float, float]:
+        return (self.lo, self.hi)
+
+
+def to_bucket_bitmap(pred: Predicate, hist: Histogram) -> jnp.ndarray:
+    """Convert a predicate to the packed bitmap of hit buckets (§3.1, Fig. 2).
+
+    Returns a (W,) uint32 packed bitmap; at least one bucket is always hit for
+    a non-empty predicate (SF*H >= 1 in the paper's cost model, §6.1).
+    """
+    h = hist.resolution
+    if pred.empty:
+        return bm.zeros(h)
+    span = hist.bounds[-1] - hist.bounds[0]
+    lo = jnp.clip(jnp.float32(max(pred.lo, -3.4e38)), hist.bounds[0] - span, hist.bounds[-1] + span)
+    hi = jnp.clip(jnp.float32(min(pred.hi, 3.4e38)), hist.bounds[0] - span, hist.bounds[-1] + span)
+    b_lo, b_hi = hit_bucket_range(hist, lo, hi)
+    return bm.range_mask(h, b_lo, b_hi)
+
+
+def matches(pred: Predicate, values: jnp.ndarray) -> jnp.ndarray:
+    """Exact tuple-level predicate evaluation (used by page inspection)."""
+    v = values.astype(jnp.float32)
+    return (v >= pred.lo) & (v <= pred.hi)

@@ -1,0 +1,2 @@
+from repro.data.corpus import PagedCorpus, synthesize_corpus  # noqa: F401
+from repro.data.pipeline import HippoDataPipeline  # noqa: F401

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for Hippo's compute hot-spots.
+
+Each kernel directory contains:
+  kernel.py — pl.pallas_call with explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (padding, interpret-mode fallback on CPU)
+  ref.py    — pure-jnp oracle used by tests and as the CPU execution path
+
+Kernels:
+  bitmap_and   — §3.2 joint-bucket filter: AND query bitmap against all entry
+                 bitmaps, OR-reduce per entry (bit-level parallelism on VPU lanes)
+  bucketize    — §4.2 histogram probe: branchless compare-count of values
+                 against resident bucket boundaries (replaces binary search)
+  page_inspect — §3.3 inspection: masked predicate evaluation + per-page counts
+"""

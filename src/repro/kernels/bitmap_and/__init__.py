@@ -1,0 +1,1 @@
+from repro.kernels.bitmap_and.ops import bitmap_and_any  # noqa: F401

@@ -1,0 +1,41 @@
+"""Public wrapper: pads to kernel tiling, handles CPU interpret fallback."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bitmap_and.kernel import BLOCK_E, bitmap_and_any_kernel
+from repro.kernels.bitmap_and.ref import bitmap_and_any_ref
+
+
+def _pad_to(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def bitmap_and_any(entries: jnp.ndarray, query: jnp.ndarray,
+                   interpret: bool | None = None) -> jnp.ndarray:
+    """Joint-bucket test of every entry bitmap against the query bitmap.
+
+    entries: (E, W) uint32, query: (W,) uint32 -> (E,) int32 0/1.
+    On CPU backends runs the Pallas kernel in interpret mode.
+    """
+    e, w = entries.shape
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    ep = _pad_to(entries, 0, BLOCK_E)
+    ep = _pad_to(ep, 1, 128)
+    qp = _pad_to(query[None, :], 1, 128)
+    out = bitmap_and_any_kernel(ep, qp, interpret=interpret)
+    return out[:e]
+
+
+__all__ = ["bitmap_and_any", "bitmap_and_any_ref"]

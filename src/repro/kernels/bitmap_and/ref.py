@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the bitmap_and kernel."""
+import jax.numpy as jnp
+
+
+def bitmap_and_any_ref(entries: jnp.ndarray, query: jnp.ndarray) -> jnp.ndarray:
+    """entries: (E, W) uint32; query: (W,) uint32 -> (E,) int32 0/1."""
+    return jnp.any((entries & query[None, :]) != 0, axis=1).astype(jnp.int32)

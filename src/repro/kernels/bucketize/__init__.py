@@ -1,0 +1,1 @@
+from repro.kernels.bucketize.ops import bucketize_values  # noqa: F401

@@ -1,0 +1,35 @@
+"""Public wrapper for the bucketize kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bucketize.kernel import BLOCK_N, bucketize_kernel
+from repro.kernels.bucketize.ref import bucketize_ref
+
+
+@partial(jax.jit, static_argnames=("resolution", "interpret"))
+def bucketize_values(values: jnp.ndarray, bounds: jnp.ndarray, resolution: int,
+                     interpret: bool | None = None) -> jnp.ndarray:
+    """Bucket ids for ``values`` against ``bounds`` ((H+1,) ascending).
+
+    Pads N to the kernel tile and H+1 to lane width (+inf so padding never
+    counts). Matches ``bucketize_ref`` bit-exactly for strictly-increasing
+    boundaries.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    n = values.shape[0]
+    pad_n = (-n) % BLOCK_N
+    v = jnp.pad(values.astype(jnp.float32), (0, pad_n))
+    h1 = bounds.shape[0]
+    pad_h = (-h1) % 128
+    b = jnp.pad(bounds.astype(jnp.float32), (0, pad_h),
+                constant_values=jnp.inf)[None, :]
+    out = bucketize_kernel(v, b, resolution, interpret=interpret)
+    return out[:n]
+
+
+__all__ = ["bucketize_values", "bucketize_ref"]

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the bucketize kernel: the searchsorted formulation."""
+import jax.numpy as jnp
+
+
+def bucketize_ref(values: jnp.ndarray, bounds: jnp.ndarray, resolution: int) -> jnp.ndarray:
+    """values: (N,) f32; bounds: (H+1,) f32 strictly increasing -> (N,) int32."""
+    ids = jnp.searchsorted(bounds, values.astype(jnp.float32), side="right") - 1
+    return jnp.clip(ids, 0, resolution - 1).astype(jnp.int32)

@@ -1,0 +1,1 @@
+from repro.kernels.page_inspect.ops import page_inspect  # noqa: F401

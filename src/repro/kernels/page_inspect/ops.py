@@ -1,0 +1,35 @@
+"""Public wrapper for the page_inspect kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.page_inspect.kernel import BLOCK_P, page_inspect_kernel
+from repro.kernels.page_inspect.ref import page_inspect_ref
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def page_inspect(keys: jnp.ndarray, valid: jnp.ndarray, mask: jnp.ndarray,
+                 lo, hi, interpret: bool | None = None):
+    """Inspect possible-qualified pages: exact qualifying mask + page counts.
+
+    keys: (P, C) f32, valid: (P, C) bool, mask: (P,) bool.
+    Returns (qual (P, C) bool, counts (P,) int32).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    p, c = keys.shape
+    pad_p = (-p) % BLOCK_P
+    pad_c = (-c) % 128
+    kp = jnp.pad(keys.astype(jnp.float32), ((0, pad_p), (0, pad_c)),
+                 constant_values=jnp.inf)
+    vp = jnp.pad(valid.astype(jnp.uint8), ((0, pad_p), (0, pad_c)))
+    mp = jnp.pad(mask.astype(jnp.uint8), (0, pad_p))[:, None]
+    interval = jnp.stack([jnp.float32(lo), jnp.float32(hi)])[None, :]
+    qual, counts = page_inspect_kernel(kp, vp, mp, interval, interpret=interpret)
+    return qual[:p, :c].astype(bool), counts[:p, 0]
+
+
+__all__ = ["page_inspect", "page_inspect_ref"]

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the page_inspect kernel."""
+import jax.numpy as jnp
+
+
+def page_inspect_ref(keys: jnp.ndarray, valid: jnp.ndarray, mask: jnp.ndarray,
+                     lo, hi):
+    """keys: (P, C) f32; valid: (P, C) bool; mask: (P,) bool.
+    Returns (qual (P, C) bool, counts (P,) int32)."""
+    k = keys.astype(jnp.float32)
+    qual = mask[:, None] & valid & (k >= lo) & (k <= hi)
+    return qual, qual.sum(axis=1, dtype=jnp.int32)

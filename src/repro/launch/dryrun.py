@@ -1,0 +1,258 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+if os.environ.get("REPRO_XLA_EXTRA"):  # debugging hooks (e.g. --xla_dump_to)
+    os.environ["XLA_FLAGS"] += " " + os.environ["REPRO_XLA_EXTRA"]
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. lowers the appropriate step (train_step for train_4k; prefill_step for
+     prefill_32k; decode serve_step for decode_32k / long_500k) against
+     ShapeDtypeStruct inputs with explicit in_shardings,
+  3. compiles, records memory_analysis / cost_analysis, and parses the
+     collective ops (kind, shape, bytes, group size) out of the HLO,
+  4. writes one JSON record per cell under artifacts/dryrun/.
+
+Failures (sharding mismatch, OOM at compile, unsupported collective) are
+bugs; the run exits non-zero if any cell fails.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+      [--mesh single|multi|both] [--out artifacts/dryrun]
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import get_config, list_archs, shape_cells  # noqa: E402
+from repro.launch import steps as steps_lib  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.shardings import (  # noqa: E402
+    make_opt_shardings, make_param_shardings, replicated,
+    train_batch_shardings, tree_cache_shardings,
+)
+from repro.optim.adamw import AdamWState  # noqa: E402
+
+_COLLECTIVE_RE = re.compile(
+    r"(\w+\[[^\]]*\][^=]*)= ([\w-]*(?:all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)[\w-]*)\(", )
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def parse_collectives(hlo_text: str) -> list[dict]:
+    """Extract collective ops with output bytes and replica-group size."""
+    out = []
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.search(r"= ((?:\w+\[[^\]]+\])(?:[^ ]*)) ([\w-]*(?:all-gather|"
+                      r"all-reduce|reduce-scatter|all-to-all|collective-permute)"
+                      r"[\w-]*)\(", line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        op = re.sub(r"-start$|-done$", "", op)
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(shape_str):
+            if dt in _DTYPE_BYTES:
+                elems = 1
+                for d in dims.split(","):
+                    if d:
+                        elems *= int(d)
+                nbytes += elems * _DTYPE_BYTES[dt]
+        g = _GROUPS_RE.search(line)
+        group = 1
+        if g:
+            first = g.group(1).split("}")[0].lstrip("{")
+            group = len([t for t in first.split(",") if t.strip() != ""])
+        out.append({"op": op, "bytes": nbytes, "group": group})
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool):
+    """Lower + compile one cell; returns the JSON record."""
+    cfg = get_config(arch)
+    shape = next(s for s in shape_cells(cfg) if s.name == shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    big = "400b" in arch
+    moment_dtype = "bfloat16" if big else "float32"  # bf16 moments for 400B (int8 measured worse: §Perf)
+    accum_dtype = "bfloat16" if big else "float32"
+    # Layout (EXPERIMENTS.md SPerf iteration 2): non-MoE TRAIN cells use
+    # FSDP-only -- batch shards over (pod,data,model) jointly, weights
+    # all-gather per use (overlappable) instead of blocking TP all-reduces.
+    # Measured on yi-6b train_4k: 12.56 -> 5.36 GiB/chip and the collective
+    # term drops below the compute term. MoE archs keep TP/EP (a gathered
+    # 16B-param MoE unit would not fit); decode/prefill keep TP (batch is
+    # too small to shard 256/512-way).
+    from repro.models import partition
+    # hybrid (Griffin) refutes FSDP-only: 21.0 GiB vs 9.2 with TP — the
+    # d^2-heavy recurrent units make gathered-weight working sets dominate.
+    fsdp_only = (shape.kind == "train" and cfg.num_experts == 0
+                 and cfg.family != "hybrid")
+    partition.BATCH_AXES_OVERRIDE = (("pod", "data", "model") if fsdp_only
+                                     else None)
+    # gradient accumulation: keep activation working set ~4 seq/device
+    # (1 for the 400B cell; 1 seq/chip already under FSDP-only)
+    n_dev_batch = 32 if multi_pod else 16
+    if multi_pod and arch == "qwen2-moe-a2.7b":
+        n_dev_batch = 16   # accum 4: fits 16 GiB (16.24 at accum 2)
+    if fsdp_only:
+        # batch shards over the widest dividing prefix of (pod,data,model):
+        # 256 ways single-pod (1 seq/chip), 32 ways multi-pod (pod,data)
+        n_dev_batch = 32 if multi_pod else 256
+    per_dev_seqs = 1 if big else 4
+    accum = (max(1, shape.global_batch // (n_dev_batch * per_dev_seqs))
+             if shape.kind == "train" else 1)
+
+    t0 = time.perf_counter()
+    with mesh:
+        p_shape = steps_lib.params_shape(cfg)
+        p_sh = make_param_shardings(cfg, mesh, p_shape)
+        specs = steps_lib.input_specs(cfg, shape, shape.kind)
+
+        if shape.kind == "train":
+            o_shape = steps_lib.opt_state_shape(cfg, p_shape, moment_dtype)
+            o_sh = make_opt_shardings(cfg, mesh, o_shape)
+            b_sh = train_batch_shardings(cfg, mesh, shape.global_batch)
+            # optimizer-state experiments for the 400B cell (EXPERIMENTS.md
+            # SPerf): bf16+plain 18.1 GiB < int8+unit_scan 20.4 < int8+plain
+            # 23.2 < bf16+unit_scan 31.6 => bf16 moments, plain update.
+            step = steps_lib.make_train_step(cfg, accum=accum,
+                                             accum_dtype=accum_dtype)
+            # donate params+opt state: updated state aliases the old buffers
+            # (without donation every train cell pays a full extra copy)
+            lowered = jax.jit(
+                step, in_shardings=(p_sh, o_sh, b_sh),
+                out_shardings=(p_sh, o_sh, None),
+                donate_argnums=(0, 1),
+            ).lower(p_shape, o_shape, specs)
+        elif shape.kind == "prefill":
+            b_sh = train_batch_shardings(cfg, mesh, shape.global_batch)
+            b_sh = {k: b_sh[k] for k in ("inputs", "positions")}
+            # the returned cache must leave sharded (seq over model); without
+            # out_shardings XLA materializes it replicated (measured +13 GiB
+            # on llama4 prefill_32k)
+            c_shape = steps_lib.cache_shape(cfg, shape.global_batch, shape.seq_len)
+            c_sh = tree_cache_shardings(cfg, mesh, c_shape, shape.global_batch)
+            # smaller q-chunk at 32k: halves the transient fp32 score tiles
+            from dataclasses import replace as _replace
+            pcfg = _replace(cfg, q_chunk=128)
+            step = steps_lib.make_prefill_step(pcfg, max_seq=shape.seq_len)
+            lowered = jax.jit(
+                step, in_shardings=(p_sh, b_sh),
+                out_shardings=(None, c_sh),
+            ).lower(p_shape, specs)
+        else:  # decode
+            c_shape = steps_lib.cache_shape(cfg, shape.global_batch, shape.seq_len)
+            c_sh = tree_cache_shardings(cfg, mesh, c_shape, shape.global_batch)
+            tok_sh = train_batch_shardings(cfg, mesh, shape.global_batch)["inputs"]
+            step = steps_lib.make_decode_step(cfg)
+            # donate the cache: in-place KV append instead of double-buffering
+            lowered = jax.jit(
+                step, in_shardings=(p_sh, c_sh, tok_sh, replicated(mesh)),
+                out_shardings=(None, c_sh),
+                donate_argnums=(1,),
+            ).lower(p_shape, c_shape, specs["tokens"], specs["pos"])
+
+        compiled = lowered.compile()
+
+    t1 = time.perf_counter()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    collectives = parse_collectives(compiled.as_text())
+    n_dev = 512 if multi_pod else 256
+
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": n_dev,
+        "grad_accum": accum,
+        "layout": "fsdp_only" if fsdp_only else "tp",
+        "compile_s": round(t1 - t0, 2),
+        "memory": {
+            "argument_bytes_per_device": mem.argument_size_in_bytes,
+            "output_bytes_per_device": mem.output_size_in_bytes,
+            "temp_bytes_per_device": mem.temp_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+            # XLA:CPU does not implement buffer donation, so the donated
+            # outputs (new params/opt-state/cache) show up as extra temp; on
+            # the TPU target they alias their inputs. The honest per-chip
+            # estimate removes one copy of the aliasable outputs:
+            "tpu_total_bytes_est": max(
+                mem.argument_size_in_bytes,
+                mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                - mem.output_size_in_bytes),
+            "total_bytes_per_device": (mem.argument_size_in_bytes
+                                       + mem.temp_size_in_bytes),
+        },
+        "cost_analysis": {
+            "flops_per_device": float(cost.get("flops", 0.0)),
+            "bytes_accessed_per_device": float(cost.get("bytes accessed", 0.0)),
+        },
+        "collectives": {
+            "count": len(collectives),
+            "ops": sorted({c["op"] for c in collectives}),
+            "bytes_by_op": {
+                op: sum(c["bytes"] for c in collectives if c["op"] == op)
+                for op in {c["op"] for c in collectives}},
+        },
+    }
+    # dry-run proof: memory_analysis must fit a v5e (16 GiB HBM/chip)
+    record["fits_hbm_16gib"] = bool(
+        record["memory"]["tpu_total_bytes_est"] < 16 * 1024 ** 3)
+    return record
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args(argv)
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    archs = [args.arch] if args.arch else list_archs()
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape in shape_cells(cfg):
+            if args.shape and shape.name != args.shape:
+                continue
+            for multi in meshes:
+                tag = f"{arch}_{shape.name}_{'multi' if multi else 'single'}"
+                path = out_dir / f"{tag}.json"
+                try:
+                    rec = lower_cell(arch, shape.name, multi)
+                    path.write_text(json.dumps(rec, indent=1))
+                    print(f"OK   {tag}  compile={rec['compile_s']}s  "
+                          f"tpu_est/dev={rec['memory']['tpu_total_bytes_est']/2**30:.2f}GiB  "
+                          f"colls={rec['collectives']['count']}  "
+                          f"fits={rec['fits_hbm_16gib']}")
+                except Exception as e:  # noqa: BLE001
+                    failures.append(tag)
+                    print(f"FAIL {tag}: {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILED: {failures}")
+        raise SystemExit(1)
+    print("\nall cells compiled")
+
+
+if __name__ == "__main__":
+    main()

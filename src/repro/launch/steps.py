@@ -1,0 +1,121 @@
+"""jit-able train / prefill / decode step factories + abstract input specs.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct and shardable, with zero device allocation — which is what
+the dry-run lowers against.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import serve, transformer
+from repro.optim import adamw_init, adamw_update, warmup_cosine
+from repro.optim.adamw import AdamWState
+
+
+# ---------------------------------------------------------------------------
+# abstract shapes (no allocation)
+# ---------------------------------------------------------------------------
+
+def params_shape(cfg):
+    return jax.eval_shape(lambda k: transformer.init_params(cfg, k),
+                          jax.random.PRNGKey(0))
+
+
+def opt_state_shape(cfg, p_shape, moment_dtype: str = "float32"):
+    return jax.eval_shape(lambda p: adamw_init(p, moment_dtype), p_shape)
+
+
+def cache_shape(cfg, batch: int, max_seq: int):
+    return jax.eval_shape(lambda: serve.init_cache(cfg, batch, max_seq))
+
+
+def input_specs(cfg, shape, kind: str):
+    """ShapeDtypeStructs for one (arch x shape) cell.
+
+    train:   {inputs, labels, positions}
+    prefill: {inputs, positions}
+    decode:  {tokens, pos}  (cache comes from ``cache_shape``)
+    """
+    b, s = shape.global_batch, shape.seq_len
+    tok = (jax.ShapeDtypeStruct((b, s), jnp.int32) if cfg.frontend == "tokens"
+           else jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16))
+    pos = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if kind == "train":
+        return {"inputs": tok, "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                "positions": pos}
+    if kind == "prefill":
+        return {"inputs": tok, "positions": pos}
+    # decode: one new token against a seq_len cache
+    tok1 = (jax.ShapeDtypeStruct((b, 1), jnp.int32) if cfg.frontend == "tokens"
+            else jax.ShapeDtypeStruct((b, 1, cfg.d_model), jnp.bfloat16))
+    return {"tokens": tok1, "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg, *, peak_lr: float = 3e-4, warmup: int = 2000,
+                    total: int = 100_000, weight_decay: float = 0.1,
+                    remat: bool = True, accum: int = 1,
+                    accum_dtype: str = "float32", opt_unit_scan: bool = False):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``accum`` > 1 scans over microbatches (gradient accumulation): activation
+    memory scales with batch/accum while arithmetic and gradient math are
+    unchanged. Accumulation buffers shard like the params; ``accum_dtype``
+    trades accumulator precision for HBM (bf16 used for the 400B cell, where
+    an fp32 buffer alone is 6.2 GiB/device).
+    """
+    adt = jnp.dtype(accum_dtype)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: transformer.loss_fn(cfg, p, batch, remat=remat))(params)
+
+    def train_step(params, opt_state, batch):
+        lr = warmup_cosine(opt_state.step, peak_lr=peak_lr, warmup_steps=warmup,
+                           total_steps=total)
+        if accum == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            micro = jax.tree_util.tree_map(
+                lambda t: t.reshape(accum, t.shape[0] // accum, *t.shape[1:]),
+                batch)
+
+            def acc_fn(carry, mb):
+                tot, g_acc = carry
+                loss, g = grads_of(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: (a.astype(jnp.float32)
+                                  + b.astype(jnp.float32)).astype(adt), g_acc, g)
+                return (tot + loss, g_acc), None
+
+            g0 = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, adt), params)
+            (loss_sum, grads), _ = jax.lax.scan(acc_fn, (jnp.float32(0), g0), micro)
+            loss = loss_sum / accum
+            grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+        params, opt_state, metrics = adamw_update(
+            grads, opt_state, params, lr=lr, weight_decay=weight_decay,
+            unit_scan=opt_unit_scan)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg, max_seq: int):
+    def prefill_step(params, batch):
+        return serve.prefill(cfg, params, batch["inputs"], batch["positions"],
+                             max_seq)
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    def decode_step(params, cache, tokens, pos):
+        return serve.decode_step(cfg, params, cache, tokens, pos)
+    return decode_step

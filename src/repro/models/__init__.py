@@ -1,0 +1,1 @@
+from repro.models import layers, moe, rglru, rwkv, transformer  # noqa: F401

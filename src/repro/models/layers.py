@@ -1,0 +1,243 @@
+"""Shared transformer layers: norms, positional encodings, blocked GQA
+attention, SwiGLU. Pure-functional: params are dict pytrees, inits take rng
+keys, applies are jit/pjit-safe.
+
+Attention is *blocked* (flash-style): queries are processed in chunks with a
+lax.scan; per chunk the full K/V is visited with causal/window masking and the
+softmax runs in fp32. This keeps peak memory at O(q_chunk * S) per head rather
+than O(S^2), which is what makes prefill_32k lowerable, and it is
+remat-friendly for training.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    s = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * s).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def norm_init(cfg, key):
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((cfg.d_model,), jnp.float32),
+                "bias": jnp.zeros((cfg.d_model,), jnp.float32)}
+    return {"scale": jnp.zeros((cfg.d_model,), jnp.float32)}
+
+
+def apply_norm(cfg, p, x):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"])
+    return rms_norm(x, p["scale"])
+
+
+# ---------------------------------------------------------------------------
+# positional encodings
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions: jnp.ndarray, dim: int, theta: float) -> tuple:
+    """positions: (..., S) -> cos/sin (..., S, dim/2) in fp32."""
+    half = dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray,
+               fraction: float = 1.0) -> jnp.ndarray:
+    """x: (B, S, H, hd); cos/sin: (B, S, half_rot). Rotates the leading
+    ``fraction`` of head dims (stablelm rotates 25%)."""
+    hd = x.shape[-1]
+    rot = int(hd * fraction)
+    half = rot // 2
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., :half], xr[..., half:]
+    c = cos[..., None, :half].astype(x.dtype)
+    s = sin[..., None, :half].astype(x.dtype)
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return jnp.concatenate([out, xp], axis=-1) if rot < hd else out
+
+
+def mrope_angles(positions: jnp.ndarray, sections: tuple, theta: float):
+    """Multimodal RoPE (qwen2-vl): positions (B, 3, S) for (t, h, w); each
+    head-dim section uses its own position stream. Returns cos/sin
+    (B, S, sum(sections))."""
+    cs, ss = [], []
+    for i, sec in enumerate(sections):
+        freqs = theta ** (-jnp.arange(0, sec, dtype=jnp.float32) / sum(sections))
+        ang = positions[:, i, :].astype(jnp.float32)[..., None] * freqs
+        cs.append(jnp.cos(ang))
+        ss.append(jnp.sin(ang))
+    return jnp.concatenate(cs, axis=-1), jnp.concatenate(ss, axis=-1)
+
+
+def sinusoidal_embedding(positions: jnp.ndarray, dim: int) -> jnp.ndarray:
+    """Absolute sinusoidal position embedding (musicgen): (..., S) -> (..., S, dim)."""
+    half = dim // 2
+    freqs = 10000.0 ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def positional_angles(cfg, positions):
+    """cos/sin streams for the configured scheme; None for sinusoidal."""
+    hd = cfg.resolved_head_dim
+    if cfg.pos_emb == "rope":
+        if positions.ndim == 3:  # (B, 3, S) stub passes mrope-style positions
+            positions = positions[:, 0, :]
+        return rope_angles(positions, int(hd * cfg.rope_fraction), cfg.rope_theta)
+    if cfg.pos_emb == "mrope":
+        if positions.ndim == 2:  # text-only: all three streams identical
+            positions = jnp.broadcast_to(positions[:, None, :],
+                                         (positions.shape[0], 3, positions.shape[1]))
+        return mrope_angles(positions, cfg.mrope_sections, cfg.rope_theta)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# blocked (flash-style) attention
+# ---------------------------------------------------------------------------
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              causal: bool = True, window: int = 0, q_chunk: int = 512,
+              q_offset: int = 0) -> jnp.ndarray:
+    """GQA attention. q: (B, Sq, Hq, hd); k/v: (B, Skv, Hkv, hd).
+
+    Queries are scanned in chunks; keys/values are visited in full per chunk
+    with fp32 softmax. ``window`` > 0 restricts to a local causal window.
+    ``q_offset`` is the absolute position of q[0] relative to k[0] (used by
+    decode where Sq=1 sits at the end of the cache).
+    """
+    b, sq, hq, hd = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(hd)
+    qc = min(q_chunk, sq)
+    while sq % qc:
+        qc -= 1
+    n_chunks = sq // qc
+
+    kt = k.transpose(0, 2, 3, 1)           # (B, Hkv, hd, Skv)
+    vt = v.transpose(0, 2, 1, 3)           # (B, Hkv, Skv, hd)
+    kv_idx = jnp.arange(skv)
+
+    def chunk_fn(carry, ci):
+        qs = q.reshape(b, n_chunks, qc, hq, hd)[:, ci]          # (B, qc, Hq, hd)
+        qg = qs.reshape(b, qc, hkv, g, hd).transpose(0, 2, 3, 1, 4)  # (B,Hkv,g,qc,hd)
+        # bf16 operands, fp32 MXU accumulation: fp32 lives only in the scores
+        scores = jnp.einsum("bhgqd,bhdk->bhgqk", qg, kt,
+                            preferred_element_type=jnp.float32) * scale
+        q_idx = q_offset + ci * qc + jnp.arange(qc)
+        mask = jnp.ones((qc, skv), bool)
+        if causal:
+            mask &= kv_idx[None, :] <= q_idx[:, None]
+        if window:
+            mask &= kv_idx[None, :] > q_idx[:, None] - window
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+        p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)     # PV in model dtype
+        out = jnp.einsum("bhgqk,bhkd->bhgqd", p, vt,
+                         preferred_element_type=jnp.float32)
+        out = out.transpose(0, 3, 1, 2, 4).reshape(b, qc, hq, hd)
+        return carry, out.astype(q.dtype)
+
+    # Remat each chunk: backward recomputes the fp32 scores/probs instead of
+    # saving them per chunk — the flash-attention memory profile (O(qc*Skv)
+    # transient instead of O(Sq*Skv) resident during the layer's backward).
+    _, chunks = jax.lax.scan(jax.checkpoint(chunk_fn), None, jnp.arange(n_chunks))
+    # chunks: (n_chunks, B, qc, Hq, hd) -> (B, Sq, Hq, hd)
+    return chunks.transpose(1, 0, 2, 3, 4).reshape(b, sq, hq, hd)
+
+
+# ---------------------------------------------------------------------------
+# attention block (pre-norm attn + SwiGLU ffn) — kinds: attn / attn_local / moe
+# ---------------------------------------------------------------------------
+
+def attn_params_init(cfg, key):
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(keys[0], (cfg.d_model, cfg.num_heads * hd), dt),
+        "wk": dense_init(keys[1], (cfg.d_model, cfg.num_kv_heads * hd), dt),
+        "wv": dense_init(keys[2], (cfg.d_model, cfg.num_kv_heads * hd), dt),
+        "wo": dense_init(keys[3], (cfg.num_heads * hd, cfg.d_model), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads * hd,), dt)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads * hd,), dt)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads * hd,), dt)
+    return p
+
+
+def qkv_project(cfg, p, x):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, cfg.num_heads, hd)
+    k = k.reshape(b, s, cfg.num_kv_heads, hd)
+    v = v.reshape(b, s, cfg.num_kv_heads, hd)
+    return q, k, v
+
+
+def attn_apply(cfg, p, x, angles, *, window: int = 0):
+    """Self-attention over the full sequence (training / prefill)."""
+    b, s, _ = x.shape
+    q, k, v = qkv_project(cfg, p, x)
+    if angles is not None:
+        cos, sin = angles
+        q = apply_rope(q, cos, sin, cfg.rope_fraction)
+        k = apply_rope(k, cos, sin, cfg.rope_fraction)
+    out = attention(q, k, v, causal=True, window=window, q_chunk=cfg.q_chunk)
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU FFN
+# ---------------------------------------------------------------------------
+
+def ffn_params_init(cfg, key, d_ff: int | None = None):
+    dt = jnp.dtype(cfg.dtype)
+    f = d_ff or cfg.d_ff
+    keys = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(keys[0], (cfg.d_model, f), dt),
+        "w_up": dense_init(keys[1], (cfg.d_model, f), dt),
+        "w_down": dense_init(keys[2], (f, cfg.d_model), dt),
+    }
+
+
+def ffn_apply(p, x):
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]

@@ -1,0 +1,122 @@
+"""Mixture-of-Experts FFN with capacity-based *slot-indexed* dispatch.
+
+Dispatch is gather/scatter on flat expert slots rather than the Mesh-TF
+one-hot einsum: the (tokens, E, C) dispatch tensor of the einsum formulation
+is O(N*E*C) and explodes at production token counts (measured 62 TiB/device
+for qwen2-moe train_4k — see EXPERIMENTS.md §Perf); slot indexing keeps the
+footprint at O(E*C*d) per token group.
+
+Tokens are grouped per batch row (GShard-style groups): capacity is computed
+within each group, routing state is (S, K) ints per group, and every einsum
+over experts is a batched matmul that shards cleanly — experts over the
+``model`` mesh axis when divisible (llama4: 128/16 = 8 experts/shard, EP) and
+TP inside the expert FFN otherwise (qwen2-moe: 60 experts, d_ff sharded).
+Shared experts are a plain SwiGLU applied to every token.
+
+Router: softmax (qwen) or sigmoid (llama4) over expert logits in fp32; top-k
+selection; tokens beyond an expert's capacity are dropped (their output falls
+back to the shared/residual path), matching Switch/GShard semantics.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def moe_params_init(cfg, key):
+    dt = jnp.dtype(cfg.dtype)
+    f = cfg.moe_d_ff or cfg.d_ff
+    keys = jax.random.split(key, 5)
+    p = {
+        "router": layers.dense_init(keys[0], (cfg.d_model, cfg.num_experts),
+                                    jnp.float32),
+        "w_gate": layers.dense_init(keys[1], (cfg.num_experts, cfg.d_model, f), dt),
+        "w_up": layers.dense_init(keys[2], (cfg.num_experts, cfg.d_model, f), dt),
+        "w_down": layers.dense_init(keys[3], (cfg.num_experts, f, cfg.d_model), dt),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = layers.ffn_params_init(
+            cfg, keys[4], d_ff=cfg.num_shared_experts * f)
+    return p
+
+
+def group_capacity(cfg, group_tokens: int) -> int:
+    cap = int(math.ceil(cfg.capacity_factor * group_tokens * cfg.top_k
+                        / max(cfg.num_experts, 1)))
+    return max(cap, 1)
+
+
+def _route(cfg, xf, router):
+    """xf: (S, d) one group. Returns (slot (S, K), gate (S, K)) with
+    slot = expert*C + position_in_expert for kept assignments (OOB slot E*C
+    marks capacity-dropped assignments)."""
+    s = xf.shape[0]
+    e, k = cfg.num_experts, cfg.top_k
+    c = group_capacity(cfg, s)
+    logits = xf.astype(jnp.float32) @ router
+    if cfg.router_act == "sigmoid":
+        probs = jax.nn.sigmoid(logits)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert_idx = jax.lax.top_k(probs, k)                   # (S, K)
+    if cfg.router_act == "softmax" and k > 1:
+        gate = gate / (gate.sum(-1, keepdims=True) + 1e-9)
+    # position of each assignment within its expert (running count over the
+    # flattened (token, k) order — deterministic, first-come-first-served)
+    onehot = jax.nn.one_hot(expert_idx.reshape(-1), e, dtype=jnp.int32)  # (S*K, E)
+    pos = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1      # (S*K,)
+    pos = pos.reshape(s, k)
+    keep = pos < c
+    slot = jnp.where(keep, expert_idx * c + pos, e * c)          # OOB -> dropped
+    return slot, gate * keep
+
+
+def moe_apply(cfg, p, x):
+    """x: (B, S, d) -> (B, S, d). Routed top-k experts + shared experts."""
+    b, s, d = x.shape
+    e = cfg.num_experts
+    c = group_capacity(cfg, s)
+
+    slot, gate = jax.vmap(lambda xg: _route(cfg, xg, p["router"]))(x)  # (B, S, K)
+
+    # dispatch: scatter tokens into (B, E*C, d) slot buffers (drop OOB)
+    def scatter_one(xg, slot_g, gate_g):
+        buf = jnp.zeros((e * c, d), x.dtype)
+        idx = slot_g.reshape(-1)                                  # (S*K,)
+        tok = jnp.repeat(jnp.arange(xg.shape[0]), slot_g.shape[1])
+        return buf.at[idx].add(xg[tok], mode="drop")
+
+    exp_in = jax.vmap(scatter_one)(x, slot, gate)                # (B, E*C, d)
+    exp_in = exp_in.reshape(b, e, c, d)
+
+    hidden = jax.nn.silu(jnp.einsum("becd,edf->becf", exp_in, p["w_gate"]))
+    hidden = hidden * jnp.einsum("becd,edf->becf", exp_in, p["w_up"])
+    exp_out = jnp.einsum("becf,efd->becd", hidden, p["w_down"])  # (B, E, C, d)
+
+    # combine: gather each assignment's slot output, weight by the gate
+    def gather_one(out_g, slot_g, gate_g):
+        flat = out_g.reshape(e * c, d)
+        picked = flat.at[slot_g.reshape(-1)].get(mode="fill", fill_value=0.0)
+        picked = picked.reshape(*slot_g.shape, d)                # (S, K, d)
+        return (picked * gate_g[..., None].astype(picked.dtype)).sum(axis=1)
+
+    out = jax.vmap(gather_one)(exp_out, slot, gate)              # (B, S, d)
+
+    if cfg.num_shared_experts:
+        out = out + layers.ffn_apply(p["shared"], x.reshape(b * s, d)).reshape(b, s, d)
+    return out
+
+
+def aux_load_balance_loss(cfg, x, p):
+    """Switch-style load-balance auxiliary loss."""
+    n = x.shape[0] * x.shape[1]
+    logits = x.reshape(n, -1).astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top1 = jnp.argmax(probs, axis=-1)
+    frac_tokens = jnp.mean(jax.nn.one_hot(top1, cfg.num_experts), axis=0)
+    frac_probs = probs.mean(axis=0)
+    return cfg.num_experts * jnp.sum(frac_tokens * frac_probs)

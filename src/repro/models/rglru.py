@@ -1,0 +1,121 @@
+"""Griffin/RecurrentGemma recurrent block: temporal conv + RG-LRU.
+
+RG-LRU (arXiv:2402.19427 §2.4):
+    r_t = sigmoid(x_t W_r)                     recurrence gate
+    i_t = sigmoid(x_t W_i)                     input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)     data-dependent decay in (0,1)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The affine recurrence (h -> a*h + b) is associative, so within a TIME CHUNK it
+runs as ``jax.lax.associative_scan`` (O(log L) depth on TPU); chunks are
+scanned with a carried (conv window, h) state and jax.checkpoint on the chunk
+body. Unchunked, the associative scan's backward keeps per-level (a, b)
+intermediates over the whole sequence (measured 61 GiB/device on the
+recurrentgemma train_4k dry-run — EXPERIMENTS.md §Perf); chunked, the
+footprint is bounded by the chunk length.
+
+Block layout (Griffin): y = W_out( GeLU(x W_gate) * RG-LRU(conv1d(x W_x)) ).
+The same chunk path serves decode (S=1, carried state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+TIME_CHUNK = 256
+
+
+def rglru_params_init(cfg, key):
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    keys = jax.random.split(key, 6)
+    return {
+        "w_x": layers.dense_init(keys[0], (d, d), dt),
+        "w_gate": layers.dense_init(keys[1], (d, d), dt),
+        "w_out": layers.dense_init(keys[2], (d, d), dt),
+        # depthwise causal temporal conv, width cfg.conv_width; tap 0 applies
+        # to the newest timestep
+        "conv": layers.dense_init(keys[3], (cfg.conv_width, d), dt, scale=0.5),
+        "w_r": layers.dense_init(keys[4], (d, d), dt),
+        "w_i": layers.dense_init(keys[5], (d, d), dt),
+        # Lambda init so softplus(Lambda) spans decay half-lives ~ [3, 700]
+        "lam": jnp.linspace(-2.0, 2.0, d).astype(jnp.float32),
+    }
+
+
+def _conv_with_tail(u: jnp.ndarray, tail: jnp.ndarray, w: jnp.ndarray):
+    """Causal depthwise conv over a chunk given the previous K-1 inputs.
+
+    u: (B, L, d); tail: (B, K-1, d); w: (K, d) with w[0] on the newest step.
+    Returns (uc (B, L, d), new_tail (B, K-1, d))."""
+    k = w.shape[0]
+    ext = jnp.concatenate([tail, u], axis=1)          # (B, L+K-1, d)
+    out = jnp.zeros_like(u)
+    for j in range(k):                                 # K=4 — stays fused
+        out = out + ext[:, k - 1 - j : ext.shape[1] - j, :] * w[j][None, None, :]
+    return out, ext[:, -(k - 1):, :]
+
+
+def _chunk_core(cfg, p, xc, tail, h0):
+    """One time chunk of the recurrent branch. xc: (B, L, d) block input
+    (post-norm); tail: (B, K-1, d) conv carry; h0: (B, d) hidden carry.
+    Returns (h (B, L, d), new_tail, h_last)."""
+    u = xc @ p["w_x"]
+    uc, new_tail = _conv_with_tail(u, tail, p["conv"])
+    r = jax.nn.sigmoid((uc @ p["w_r"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((uc @ p["w_i"]).astype(jnp.float32))
+    log_a = -cfg.rglru_c * jax.nn.softplus(p["lam"])[None, None, :] * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i * uc.astype(jnp.float32))
+    # fold the carry as a virtual step 0: a_0 = 0, b_0 = h0
+    a_ext = jnp.concatenate([jnp.zeros_like(a[:, :1]), a], axis=1)
+    b_ext = jnp.concatenate([h0.astype(jnp.float32)[:, None], gated], axis=1)
+
+    def combine(pq, qr):
+        a1, b1 = pq
+        a2, b2 = qr
+        return a1 * a2, b2 + a2 * b1
+
+    _, h = jax.lax.associative_scan(combine, (a_ext, b_ext), axis=1)
+    h = h[:, 1:].astype(xc.dtype)
+    return h, new_tail, h[:, -1]
+
+
+def rglru_block_apply(cfg, p, x, state=None):
+    """Full Griffin recurrent block. x: (B, S, d).
+
+    state: None (training/prefill from zero state) or
+    {"conv": (B, K-1, d), "h": (B, d)} (decode / continued prefill).
+    Returns (y, new_state).
+    """
+    b, s, d = x.shape
+    kw = cfg.conv_width - 1
+    gate = jax.nn.gelu((x @ p["w_gate"]).astype(jnp.float32)).astype(x.dtype)
+    tail0 = (jnp.zeros((b, kw, d), x.dtype) if state is None
+             else state["conv"].astype(x.dtype))
+    h0 = (jnp.zeros((b, d), x.dtype) if state is None
+          else state["h"].astype(x.dtype))
+
+    lc = min(TIME_CHUNK, s)
+    while s % lc:
+        lc -= 1
+    if lc == s:
+        h, tail, h_last = _chunk_core(cfg, p, x, tail0, h0)
+    else:
+        nc = s // lc
+        xc = x.reshape(b, nc, lc, d).transpose(1, 0, 2, 3)
+
+        def chunk_fn(carry, xch):
+            tail, h0 = carry
+            h, tail, h_last = _chunk_core(cfg, p, xch, tail, h0)
+            return (tail, h_last), h
+
+        (tail, h_last), hs = jax.lax.scan(jax.checkpoint(chunk_fn),
+                                          (tail0, h0), xc)
+        h = hs.transpose(1, 0, 2, 3).reshape(b, s, d)
+
+    y = (gate * h) @ p["w_out"]
+    return y, {"conv": tail, "h": h_last}

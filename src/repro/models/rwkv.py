@@ -1,0 +1,151 @@
+"""RWKV-6 ("Finch", arXiv:2404.05892) block: data-dependent-decay linear
+attention (time-mix) + channel-mix. Attention-free; per-head state is a
+(head_k x head_v) matrix, so decode is O(d^2) per token independent of
+context length — which is why rwkv6 runs the long_500k cell.
+
+Time-mix recurrence (per head, per step):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+with w_t = exp(-exp(wx_t)) a data-dependent per-channel decay and u the
+"bonus" for the current token. Token-shift interpolation (data-dependent mu
+via a low-rank projection) feeds r/k/v/w/g.
+
+The sequence is processed in TIME CHUNKS (default 128 steps) under an outer
+lax.scan carrying (wkv state, shift token), with jax.checkpoint on the chunk
+body: the backward pass stores state only at chunk boundaries and recomputes
+within a chunk. Without chunking, scan backward saves the (B, H, hd, hd) fp32
+state at *every* step (measured 86 GiB/device on the train_4k dry-run —
+EXPERIMENTS.md §Perf); with it, the footprint is S/chunk boundary states.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+LORA_R = 32
+TIME_CHUNK = 128
+
+
+def rwkv_params_init(cfg, key):
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    keys = jax.random.split(key, 12)
+    return {
+        # time-mix projections
+        "w_r": layers.dense_init(keys[0], (d, d), dt),
+        "w_k": layers.dense_init(keys[1], (d, d), dt),
+        "w_v": layers.dense_init(keys[2], (d, d), dt),
+        "w_g": layers.dense_init(keys[3], (d, d), dt),
+        "w_o": layers.dense_init(keys[4], (d, d), dt),
+        # data-dependent decay (low-rank): wx = w_base + tanh(x A) B
+        "decay_base": jnp.full((d,), -6.0, jnp.float32),
+        "decay_a": layers.dense_init(keys[5], (d, LORA_R), dt),
+        "decay_b": layers.dense_init(keys[6], (LORA_R, d), dt, scale=0.1),
+        # token-shift interpolation factors (data-dependent mu, low-rank)
+        "mu_base": jnp.full((5, d), 0.5, jnp.float32),
+        "mu_a": layers.dense_init(keys[7], (d, LORA_R), dt),
+        "mu_b": layers.dense_init(keys[8], (LORA_R, 5 * d), dt, scale=0.1),
+        "bonus": jnp.zeros((d,), jnp.float32),
+        # channel-mix
+        "cm_k": layers.dense_init(keys[9], (d, cfg.d_ff), dt),
+        "cm_v": layers.dense_init(keys[10], (cfg.d_ff, d), dt),
+        "cm_r": layers.dense_init(keys[11], (d, d), dt),
+        "cm_mu": jnp.full((2, d), 0.5, jnp.float32),
+    }
+
+
+def _heads(cfg, x):
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    return x.reshape(b, s, d // hd, hd)
+
+
+def _tmix_chunk(cfg, p, xc, prev, s0):
+    """One time chunk. xc: (B, L, d); prev: (B, d) last token of the previous
+    chunk; s0: (B, H, hd, hd) fp32 carry-in state.
+    Returns (out (B, L, d) fp32-pregate, s_last, last_token)."""
+    b, l, d = xc.shape
+    hd = cfg.resolved_head_dim
+    nh = d // hd
+    xs = jnp.concatenate([prev[:, None], xc[:, :-1]], axis=1)     # shifted
+
+    # data-dependent interpolation mu_t for the 5 streams (r, k, v, w, g);
+    # mixing stays in the model dtype (fp32 blow-up measured 27 GiB at 32k)
+    lora = jnp.tanh(xc @ p["mu_a"]) @ p["mu_b"]                   # (B, L, 5d)
+    mu = (p["mu_base"].reshape(1, 1, 5, d)
+          + lora.reshape(b, l, 5, d).astype(jnp.float32)).astype(xc.dtype)
+    mixed = mu * xc[:, :, None] + (1 - mu) * xs[:, :, None]
+    xr, xk, xv, xw, xg = [mixed[:, :, i] for i in range(5)]
+
+    r = _heads(cfg, xr @ p["w_r"])                                # (B,L,H,hd)
+    k = _heads(cfg, xk @ p["w_k"])
+    v = _heads(cfg, xv @ p["w_v"])
+    g = jax.nn.silu((xg @ p["w_g"]).astype(jnp.float32))
+    wx = p["decay_base"] + (jnp.tanh(xw @ p["decay_a"]) @ p["decay_b"]
+                            ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(wx)).reshape(b, l, nh, hd)               # (0,1)
+    u = p["bonus"].reshape(nh, hd)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                                      # (B,H,hd)
+        kv = kt[..., :, None] * vt[..., None, :]                  # (B,H,hd,hd)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, out
+
+    xs_t = tuple(t.astype(jnp.float32).transpose(1, 0, 2, 3)
+                 for t in (r, k, v, w))
+    s_last, outs = jax.lax.scan(step, s0, xs_t)
+    out = outs.transpose(1, 0, 2, 3).reshape(b, l, d)             # fp32
+    out = (out * g).astype(xc.dtype) @ p["w_o"]
+    return out, s_last, xc[:, -1]
+
+
+def time_mix_apply(cfg, p, x, state=None):
+    """RWKV6 time-mix. x: (B, S, d). state: {"shift": (B, d),
+    "wkv": (B, H, hd, hd)} carry-in (decode/chunked prefill) or None.
+    Returns (out, new_state)."""
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    nh = d // hd
+    prev0 = (jnp.zeros((b, d), x.dtype) if state is None
+             else state["shift"].astype(x.dtype))
+    s0 = (jnp.zeros((b, nh, hd, hd), jnp.float32) if state is None
+          else state["wkv"].astype(jnp.float32))
+
+    lc = min(TIME_CHUNK, s)
+    while s % lc:
+        lc -= 1
+    if lc == s:  # single chunk (decode and short sequences)
+        out, s_last, last = _tmix_chunk(cfg, p, x, prev0, s0)
+        return out, {"shift": last, "wkv": s_last}
+
+    nc = s // lc
+    xc = x.reshape(b, nc, lc, d).transpose(1, 0, 2, 3)            # (nc,B,L,d)
+
+    def chunk_fn(carry, xch):
+        s0, prev = carry
+        out, s_last, last = _tmix_chunk(cfg, p, xch, prev, s0)
+        return (s_last, last), out
+
+    (s_last, last), outs = jax.lax.scan(jax.checkpoint(chunk_fn),
+                                        (s0, prev0), xc)
+    out = outs.transpose(1, 0, 2, 3).reshape(b, s, d)
+    return out, {"shift": last, "wkv": s_last}
+
+
+def channel_mix_apply(cfg, p, x, state=None):
+    """RWKV channel-mix (squared-ReLU FFN with token shift)."""
+    if state is None:
+        xs = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        xs = state["shift"][:, None, :].astype(x.dtype)
+    mu = p["cm_mu"].reshape(1, 1, 2, x.shape[-1]).astype(x.dtype)
+    mr = mu[:, :, 0] * x + (1 - mu[:, :, 0]) * xs
+    mk = mu[:, :, 1] * x + (1 - mu[:, :, 1]) * xs
+    hidden = jnp.square(jax.nn.relu(mk @ p["cm_k"]))
+    out = jax.nn.sigmoid((mr @ p["cm_r"]).astype(jnp.float32)).astype(x.dtype) \
+        * (hidden @ p["cm_v"])
+    return out, {"shift": x[:, -1]}

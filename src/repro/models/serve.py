@@ -1,0 +1,307 @@
+"""Serving: KV/recurrent cache structures, prefill, and single-token decode.
+
+Cache layout mirrors the scan-over-units parameter stacking: one stacked cache
+pytree per pattern position, so decode scans units exactly like training does.
+
+Decode attention evaluates the query against the full cache with masking; in
+fp32 with the softmax reduction over the cache axis. Under the production
+sharding the cache's sequence axis is sharded over the ``model`` mesh axis
+whenever kv-heads don't divide it (GQA kv=1..8), so XLA's SPMD partitioner
+turns the softmax max/sum reductions into small all-reduces — exactly the
+flash-decoding partial-softmax combine, expressed at the XLA level.
+
+Local-attention blocks cache only their window (recurrentgemma: 2048), and
+recurrent blocks carry O(d) / O(d^2) state — which is what makes the
+long_500k decode cell cheap for the ssm/hybrid archs.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, moe, rglru, rwkv
+
+
+# ---------------------------------------------------------------------------
+# cache init
+# ---------------------------------------------------------------------------
+
+def _attn_cache_len(cfg, kind: str, max_seq: int) -> int:
+    if kind == "attn_local":
+        return min(cfg.window, max_seq)
+    return max_seq
+
+
+def block_cache_init(cfg, kind: str, batch: int, max_seq: int):
+    dt = jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    if kind in ("attn", "attn_local", "moe"):
+        s = _attn_cache_len(cfg, kind, max_seq)
+        return {
+            "k": jnp.zeros((batch, s, cfg.num_kv_heads, hd), dt),
+            "v": jnp.zeros((batch, s, cfg.num_kv_heads, hd), dt),
+        }
+    if kind == "rec":
+        return {
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_model), dt),
+            "h": jnp.zeros((batch, cfg.d_model), dt),
+        }
+    # rwkv
+    nh = cfg.d_model // hd
+    return {
+        "shift_t": jnp.zeros((batch, cfg.d_model), dt),
+        "shift_c": jnp.zeros((batch, cfg.d_model), dt),
+        "wkv": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+    }
+
+
+def init_cache(cfg, batch: int, max_seq: int):
+    cache = {"units": {}}
+    for j, kind in enumerate(cfg.block_pattern):
+        one = block_cache_init(cfg, kind, batch, max_seq)
+        cache["units"][f"b{j}_{kind}"] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.num_units, *x.shape)), one)
+    if cfg.leftover_pattern:
+        cache["extra"] = [block_cache_init(cfg, kind, batch, max_seq)
+                          for kind in cfg.leftover_pattern]
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# decode attention (single token against the cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(cfg, p, x, cache, pos, angles, *, window: int = 0):
+    """x: (B, 1, d); cache k/v: (B, S_c, Hkv, hd); pos: absolute position.
+
+    Returns (out (B, 1, d), new_cache). For local attention the cache is a
+    rolling buffer indexed mod window.
+    """
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    q, k, v = layers.qkv_project(cfg, p, x)          # (B,1,H*,hd)
+    if angles is not None:
+        cos, sin = angles
+        q = layers.apply_rope(q, cos, sin, cfg.rope_fraction)
+        k = layers.apply_rope(k, cos, sin, cfg.rope_fraction)
+
+    s_c = cache["k"].shape[1]
+    slot = pos % s_c if window else jnp.minimum(pos, s_c - 1)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, hd)
+    # bf16 operands + fp32 accumulation: an explicit fp32 cast of the cache
+    # materializes a full fp32 cache copy hoisted across the unit scan
+    # (measured 4 x 1.6 GiB on llama4 decode_32k — EXPERIMENTS.md §Perf)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg, ck,
+                        preferred_element_type=jnp.float32) / math.sqrt(hd)
+    kv_idx = jnp.arange(s_c)
+    if window:
+        # rolling buffer: valid entries are the last min(pos+1, window) writes
+        age = (slot - kv_idx) % s_c                    # 0 = newest
+        mask = age < jnp.minimum(pos + 1, s_c)
+    else:
+        mask = kv_idx <= pos
+    scores = jnp.where(mask[None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)            # reductions over S_c
+    out = jnp.einsum("bhgs,bshd->bhgd", probs.astype(x.dtype), cv,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, hq * hd).astype(x.dtype) @ p["wo"]
+    return out, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# per-block decode
+# ---------------------------------------------------------------------------
+
+def block_decode(cfg, kind: str, p, x, cache, pos, angles):
+    h = layers.apply_norm(cfg, p["norm1"], x)
+    if kind in ("attn", "attn_local", "moe"):
+        window = cfg.window if kind == "attn_local" else 0
+        out, cache = decode_attention(cfg, p["attn"], h, cache, pos, angles,
+                                      window=window)
+        x = x + out
+        h2 = layers.apply_norm(cfg, p["norm2"], x)
+        if kind == "moe":
+            x = x + moe.moe_apply(cfg, p["moe"], h2)
+        else:
+            x = x + layers.ffn_apply(p["ffn"], h2)
+    elif kind == "rec":
+        out, st = rglru.rglru_block_apply(cfg, p["rec"], h, state=cache)
+        cache = st
+        x = x + out
+        h2 = layers.apply_norm(cfg, p["norm2"], x)
+        x = x + layers.ffn_apply(p["ffn"], h2)
+    else:  # rwkv
+        out, st_t = rwkv.time_mix_apply(
+            cfg, p["tmix"], h,
+            state={"shift": cache["shift_t"], "wkv": cache["wkv"]})
+        x = x + out
+        h2 = layers.apply_norm(cfg, p["norm2"], x)
+        out, st_c = rwkv.channel_mix_apply(cfg, p["tmix"], h2,
+                                           state={"shift": cache["shift_c"]})
+        x = x + out
+        cache = {"shift_t": st_t["shift"], "wkv": st_t["wkv"],
+                 "shift_c": st_c["shift"]}
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# decode step (the serve_step lowered by the dry-run)
+# ---------------------------------------------------------------------------
+
+def decode_step(cfg, params, cache, tokens, pos):
+    """One-token decode. tokens: (B, 1) int32 (or (B, 1, d) embeddings for
+    stub frontends); pos: scalar int32 absolute position. Returns
+    (logits (B, V), new_cache)."""
+    x = transformer_embed(cfg, params, tokens, pos)
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    angles = layers.positional_angles(cfg, positions)
+
+    def unit_fn(x, scanned):
+        unit_params, unit_cache = scanned
+        new_cache = {}
+        for j, kind in enumerate(cfg.block_pattern):
+            name = f"b{j}_{kind}"
+            x, new_cache[name] = block_decode(cfg, kind, unit_params[name], x,
+                                              unit_cache[name], pos, angles)
+        return x, new_cache
+
+    if cfg.num_units > 0:
+        x, new_unit_cache = jax.lax.scan(
+            unit_fn, x, (params["units"], cache["units"]))
+    else:
+        new_unit_cache = cache["units"]
+    new_cache = {"units": new_unit_cache}
+    if cfg.leftover_pattern:
+        extras = []
+        for j, kind in enumerate(cfg.leftover_pattern):
+            x, c = block_decode(cfg, kind, params["extra"][j], x,
+                                cache["extra"][j], pos, angles)
+            extras.append(c)
+        new_cache["extra"] = extras
+
+    x = layers.apply_norm(cfg, params["final_norm"], x)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    return (x[:, 0] @ head), new_cache
+
+
+def transformer_embed(cfg, params, tokens, pos):
+    from repro.models import transformer
+    positions = jnp.full((tokens.shape[0], 1), pos, jnp.int32)
+    return transformer.embed_inputs(cfg, params, tokens, positions)
+
+
+# ---------------------------------------------------------------------------
+# prefill: full-sequence forward that also populates the cache
+# ---------------------------------------------------------------------------
+
+def block_prefill(cfg, kind: str, p, x, angles, max_seq: int):
+    """Training-path compute + cache capture. Returns (x, cache)."""
+    b, s, _ = x.shape
+    h = layers.apply_norm(cfg, p["norm1"], x)
+    if kind in ("attn", "attn_local", "moe"):
+        window = cfg.window if kind == "attn_local" else 0
+        q, k, v = layers.qkv_project(cfg, p["attn"], h)
+        if angles is not None:
+            cos, sin = angles
+            q = layers.apply_rope(q, cos, sin, cfg.rope_fraction)
+            k = layers.apply_rope(k, cos, sin, cfg.rope_fraction)
+        out = layers.attention(q, k, v, causal=True, window=window,
+                               q_chunk=cfg.q_chunk)
+        x = x + out.reshape(b, s, -1) @ p["attn"]["wo"]
+        h2 = layers.apply_norm(cfg, p["norm2"], x)
+        if kind == "moe":
+            x = x + moe.moe_apply(cfg, p["moe"], h2)
+        else:
+            x = x + layers.ffn_apply(p["ffn"], h2)
+        s_c = _attn_cache_len(cfg, kind, max_seq)
+        if window and s <= s_c:
+            # rolling buffer: last s tokens land at slots (pos % window)
+            ck = jnp.zeros((b, s_c, *k.shape[2:]), k.dtype)
+            idx = jnp.arange(s) % s_c
+            ck = ck.at[:, idx].set(k)
+            cv = jnp.zeros((b, s_c, *v.shape[2:]), v.dtype).at[:, idx].set(v)
+        else:
+            take = min(s, s_c)
+            pad = s_c - take
+            ck = jnp.pad(k[:, -take:], ((0, 0), (0, pad), (0, 0), (0, 0)))
+            cv = jnp.pad(v[:, -take:], ((0, 0), (0, pad), (0, 0), (0, 0)))
+            if window:  # rolling alignment for long prefill
+                roll = s % s_c
+                ck = jnp.roll(ck, roll, axis=1)
+                cv = jnp.roll(cv, roll, axis=1)
+        cache = {"k": ck, "v": cv}
+    elif kind == "rec":
+        out, st = rglru.rglru_block_apply(cfg, p["rec"], h, state=None)
+        x = x + out
+        h2 = layers.apply_norm(cfg, p["norm2"], x)
+        x = x + layers.ffn_apply(p["ffn"], h2)
+        cache = st
+    else:  # rwkv
+        out, st_t = rwkv.time_mix_apply(cfg, p["tmix"], h, state=None)
+        x = x + out
+        h2 = layers.apply_norm(cfg, p["norm2"], x)
+        out, st_c = rwkv.channel_mix_apply(cfg, p["tmix"], h2, state=None)
+        x = x + out
+        cache = {"shift_t": st_t["shift"], "shift_c": st_c["shift"],
+                 "wkv": st_t["wkv"]}
+    return x, cache
+
+
+def prefill(cfg, params, inputs, positions, max_seq: int):
+    """Forward over the prompt; returns (last-token logits (B, V), cache)."""
+    from repro.models import transformer
+    x = transformer.embed_inputs(cfg, params, inputs, positions)
+    angles = layers.positional_angles(cfg, positions)
+
+    def unit_fn(x, unit_params):
+        caches = {}
+        for j, kind in enumerate(cfg.block_pattern):
+            name = f"b{j}_{kind}"
+            x, caches[name] = block_prefill(cfg, kind, unit_params[name], x,
+                                            angles, max_seq)
+        return x, caches
+
+    cache = {"units": {}}
+    if cfg.num_units > 0:
+        x, cache["units"] = jax.lax.scan(unit_fn, x, params["units"])
+    if cfg.leftover_pattern:
+        extras = []
+        for j, kind in enumerate(cfg.leftover_pattern):
+            x, c = block_prefill(cfg, kind, params["extra"][j], x, angles, max_seq)
+            extras.append(c)
+        cache["extra"] = extras
+
+    x = layers.apply_norm(cfg, params["final_norm"], x)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    return x[:, -1] @ head, cache
+
+
+# ---------------------------------------------------------------------------
+# host-side generation loop (examples / integration tests)
+# ---------------------------------------------------------------------------
+
+def generate(cfg, params, prompt_tokens, num_steps: int, max_seq: int,
+             temperature: float = 0.0, key=None):
+    """Greedy/temperature sampling. prompt_tokens: (B, S) int32."""
+    b, s = prompt_tokens.shape[0], prompt_tokens.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    logits, cache = prefill(cfg, params, prompt_tokens, positions, max_seq)
+    step_fn = jax.jit(partial(decode_step, cfg))
+    out = []
+    for t in range(num_steps):
+        if temperature > 0.0:
+            key, sub = jax.random.split(key)
+            nxt = jax.random.categorical(sub, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        out.append(nxt)
+        logits, cache = step_fn(params, cache, nxt[:, None], jnp.int32(s + t))
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,196 @@
+"""Model assembly: block dispatch, scan-over-units parameter stacking,
+forward pass, and the training loss.
+
+The layer stack is grouped into repeating *units* (``cfg.block_pattern``) and
+scanned with ``jax.lax.scan`` over stacked unit parameters — one traced copy
+of the unit regardless of depth (compact HLO, fast multi-pod compiles) — with
+``jax.checkpoint`` on the unit body for activation rematerialization.
+Leftover layers (depth not divisible by the pattern) run unscanned.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, moe, partition, rglru, rwkv
+
+
+# ---------------------------------------------------------------------------
+# block dispatch
+# ---------------------------------------------------------------------------
+
+def block_params_init(cfg, kind: str, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"norm1": layers.norm_init(cfg, k1)}
+    if kind in ("attn", "attn_local", "moe"):
+        p["attn"] = layers.attn_params_init(cfg, k2)
+        p["norm2"] = layers.norm_init(cfg, k1)
+        if kind == "moe":
+            p["moe"] = moe.moe_params_init(cfg, k3)
+        else:
+            p["ffn"] = layers.ffn_params_init(cfg, k3)
+    elif kind == "rec":
+        p["rec"] = rglru.rglru_params_init(cfg, k2)
+        p["norm2"] = layers.norm_init(cfg, k1)
+        p["ffn"] = layers.ffn_params_init(cfg, k3)
+    elif kind == "rwkv":
+        p["tmix"] = rwkv.rwkv_params_init(cfg, k2)
+        p["norm2"] = layers.norm_init(cfg, k1)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    return p
+
+
+def block_apply(cfg, kind: str, p, x, angles):
+    """Pre-norm residual block (training / prefill path, no carried state)."""
+    h = layers.apply_norm(cfg, p["norm1"], x)
+    if kind in ("attn", "attn_local", "moe"):
+        window = cfg.window if kind == "attn_local" else 0
+        x = x + layers.attn_apply(cfg, p["attn"], h, angles, window=window)
+        h2 = layers.apply_norm(cfg, p["norm2"], x)
+        if kind == "moe":
+            x = x + moe.moe_apply(cfg, p["moe"], h2)
+        else:
+            x = x + layers.ffn_apply(p["ffn"], h2)
+    elif kind == "rec":
+        out, _ = rglru.rglru_block_apply(cfg, p["rec"], h)
+        x = x + out
+        h2 = layers.apply_norm(cfg, p["norm2"], x)
+        x = x + layers.ffn_apply(p["ffn"], h2)
+    else:  # rwkv
+        out, _ = rwkv.time_mix_apply(cfg, p["tmix"], h)
+        x = x + out
+        h2 = layers.apply_norm(cfg, p["norm2"], x)
+        out, _ = rwkv.channel_mix_apply(cfg, p["tmix"], h2)
+        x = x + out
+    return x
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg, key):
+    dt = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 4 + cfg.unit_len)
+    params = {}
+    if cfg.frontend == "tokens":
+        params["embed"] = layers.dense_init(keys[0], (cfg.vocab_size, cfg.d_model),
+                                            dt, scale=1.0)
+    else:
+        # modality frontend is a stub: inputs arrive as embeddings; a single
+        # projection stands in for the (excluded) encoder output interface.
+        params["frontend_proj"] = layers.dense_init(
+            keys[0], (cfg.d_model, cfg.d_model), dt)
+
+    units = {}
+    for j, kind in enumerate(cfg.block_pattern):
+        unit_keys = jax.random.split(keys[1 + j], max(cfg.num_units, 1))
+        units[f"b{j}_{kind}"] = jax.vmap(
+            lambda k: block_params_init(cfg, kind, k))(unit_keys)
+    params["units"] = units
+
+    extra = []
+    for j, kind in enumerate(cfg.leftover_pattern):
+        extra.append(block_params_init(cfg, kind, keys[2 + cfg.unit_len]))
+    if extra:
+        params["extra"] = extra
+
+    params["final_norm"] = layers.norm_init(cfg, keys[-2])
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(keys[-1], (cfg.d_model, cfg.vocab_size), dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def embed_inputs(cfg, params, inputs, positions):
+    """tokens (B, S) int32 -> embeddings, or pass float embeddings through the
+    frontend stub projection. Adds sinusoidal absolute PE when configured.
+
+    Decode (S=1) embeds via one-hot matmul: a gather from the vocab-sharded
+    table makes XLA all-gather the whole table (~2 GiB transient for the 400B
+    vocab), while the one-hot contraction keeps it sharded and reduces a few
+    KiB of partials instead."""
+    if cfg.frontend == "tokens":
+        if inputs.shape[1] == 1:
+            onehot = jax.nn.one_hot(inputs, cfg.vocab_size,
+                                    dtype=params["embed"].dtype)
+            x = onehot @ params["embed"]
+        else:
+            x = params["embed"][inputs]
+    else:
+        x = inputs.astype(jnp.dtype(cfg.dtype)) @ params["frontend_proj"]
+    if cfg.pos_emb == "sinusoidal":
+        pos = positions if positions.ndim == 2 else positions[:, 0]
+        x = x + layers.sinusoidal_embedding(pos, cfg.d_model).astype(x.dtype)
+    return x
+
+
+def trunk(cfg, params, inputs, positions, *, remat: bool = True):
+    """Embed + all blocks + final norm -> hidden states (B, S, d)."""
+    x = partition.constrain_batch(embed_inputs(cfg, params, inputs, positions))
+    angles = layers.positional_angles(cfg, positions)
+
+    def unit_fn(x, unit_params):
+        for j, kind in enumerate(cfg.block_pattern):
+            x = block_apply(cfg, kind, unit_params[f"b{j}_{kind}"], x, angles)
+        return partition.constrain_batch(x)
+
+    body = jax.checkpoint(unit_fn) if remat else unit_fn
+    if cfg.num_units > 0:
+        x, _ = jax.lax.scan(lambda h, p: (body(h, p), None), x, params["units"])
+    for j, kind in enumerate(cfg.leftover_pattern):
+        blk = lambda h, p, kind=kind: block_apply(cfg, kind, p, h, angles)
+        if remat:
+            blk = jax.checkpoint(blk)
+        x = blk(x, params["extra"][j])
+
+    return layers.apply_norm(cfg, params["final_norm"], x)
+
+
+def lm_head(cfg, params):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def forward(cfg, params, inputs, positions, *, remat: bool = True):
+    """Full-sequence forward -> logits (B, S, V)."""
+    return trunk(cfg, params, inputs, positions, remat=remat) @ lm_head(cfg, params)
+
+
+def loss_fn(cfg, params, batch, *, remat: bool = True, ce_chunk: int = 256):
+    """Next-token cross entropy with a *chunked fused* head (big-vocab trick):
+    the (B, S, V) logits tensor is never materialized — each sequence chunk
+    computes head-matmul + log-softmax + gather and is rematerialized in the
+    backward pass. Labels of -1 are masked; softmax in fp32.
+    """
+    x = trunk(cfg, params, batch["inputs"], batch["positions"], remat=remat)
+    head = lm_head(cfg, params)
+    labels = batch["labels"]
+    b, s, _ = x.shape
+    cc = min(ce_chunk, s)
+    while s % cc:
+        cc -= 1
+    n_chunks = s // cc
+
+    def chunk(carry, ci):
+        tot, cnt = carry
+        xc = jax.lax.dynamic_slice_in_dim(x, ci * cc, cc, axis=1)
+        lc = jax.lax.dynamic_slice_in_dim(labels, ci * cc, cc, axis=1)
+        logits = (xc @ head).astype(jnp.float32)          # (B, cc, V) transient
+        mask = lc >= 0
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, jnp.maximum(lc, 0)[..., None],
+                                 axis=-1)[..., 0]
+        tot = tot + ((lse - ll) * mask).sum()
+        cnt = cnt + mask.sum()
+        return (tot, cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(jax.checkpoint(chunk),
+                                 (jnp.float32(0), jnp.int32(0)),
+                                 jnp.arange(n_chunks))
+    return tot / jnp.maximum(cnt, 1)

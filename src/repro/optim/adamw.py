@@ -1,0 +1,126 @@
+"""AdamW with configurable moment dtype and global-norm clipping.
+
+Distributed-optimization notes (used by the dry-run configs):
+  * Moments inherit the parameter sharding, so with FSDP-sharded params the
+    optimizer state is automatically ZeRO-3 partitioned.
+  * ``moment_dtype=bfloat16`` halves optimizer-state HBM; ``"int8"`` stores
+    both moments as row-quantized int8 (max-abs scale per trailing-dim row,
+    8-bit-Adam style) — 4x smaller than fp32, used for the 400B MoE cell
+    where even bf16 moments (6.2 GiB/chip at 256 chips) blow the v5e budget.
+    Update math always runs in fp32; quantization error is storage-only.
+  * Gradient accumulation lives in the train step (scan over microbatches),
+    composing with this update unchanged.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: dict
+    nu: dict
+
+
+def q8_encode(x32: jnp.ndarray) -> dict:
+    """Row-quantize fp32 to {q: int8, s: f32 (..., 1)} (symmetric max-abs)."""
+    amax = jnp.max(jnp.abs(x32), axis=-1, keepdims=True)
+    s = jnp.maximum(amax / 127.0, 1e-20)
+    q = jnp.clip(jnp.round(x32 / s), -127, 127).astype(jnp.int8)
+    return {"q": q, "s": s.astype(jnp.float32)}
+
+
+def q8_decode(d: dict) -> jnp.ndarray:
+    return d["q"].astype(jnp.float32) * d["s"]
+
+
+def _is_q8(x) -> bool:
+    return isinstance(x, dict) and set(x) == {"q", "s"}
+
+
+def adamw_init(params, moment_dtype: str = "float32") -> AdamWState:
+    if moment_dtype == "int8":
+        zeros = lambda p: {"q": jnp.zeros(p.shape, jnp.int8),
+                           "s": jnp.zeros((*p.shape[:-1], 1), jnp.float32)}
+    else:
+        dt = jnp.dtype(moment_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, dt)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree_util.tree_map(zeros, params),
+        nu=jax.tree_util.tree_map(zeros, params),
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree_util.tree_map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr, b1: float = 0.9,
+                 b2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.1,
+                 max_grad_norm: float = 1.0, unit_scan: bool = False):
+    """One AdamW step. ``lr`` may be a scalar or traced value.
+
+    ``unit_scan=True`` applies the update to the scanned layer stack
+    (``params["units"]``) one unit at a time via lax.scan: optimizer
+    transients (fp32 moment decode/encode buffers) are bounded by one unit's
+    parameters instead of the whole model — required for the 400B cell, where
+    whole-model fp32 transients alone exceed HBM.
+
+    Returns (new_params, new_state, metrics).
+    """
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        quant = _is_q8(m)
+        m32 = q8_decode(m) if quant else m.astype(jnp.float32)
+        v32 = q8_decode(v) if quant else v.astype(jnp.float32)
+        m32 = b1 * m32 + (1 - b1) * g32
+        v32 = b2 * v32 + (1 - b2) * g32 * g32
+        mhat = m32 / c1
+        vhat = v32 / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        if quant:
+            return new_p, q8_encode(m32), q8_encode(v32)
+        return new_p, m32.astype(m.dtype), v32.astype(v.dtype)
+
+    def tree_upd(p_t, g_t, m_t, v_t):
+        out = jax.tree_util.tree_map(upd, p_t, g_t, m_t, v_t)
+        is_t = lambda t: isinstance(t, tuple)
+        return (jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=is_t),
+                jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=is_t),
+                jax.tree_util.tree_map(lambda t: t[2], out, is_leaf=is_t))
+
+    if unit_scan and isinstance(params, dict) and "units" in params:
+        rest_p = {k: v for k, v in params.items() if k != "units"}
+        rest_g = {k: v for k, v in grads.items() if k != "units"}
+        rest_m = {k: v for k, v in state.mu.items() if k != "units"}
+        rest_v = {k: v for k, v in state.nu.items() if k != "units"}
+        new_rest_p, new_rest_m, new_rest_v = tree_upd(rest_p, rest_g,
+                                                      rest_m, rest_v)
+
+        def unit_step(_, xs):
+            return None, tree_upd(*xs)
+
+        _, (u_p, u_m, u_v) = jax.lax.scan(
+            unit_step, None,
+            (params["units"], grads["units"], state.mu["units"],
+             state.nu["units"]))
+        new_params = {**new_rest_p, "units": u_p}
+        new_mu = {**new_rest_m, "units": u_m}
+        new_nu = {**new_rest_v, "units": u_v}
+    else:
+        new_params, new_mu, new_nu = tree_upd(params, grads, state.mu, state.nu)
+    return new_params, AdamWState(step, new_mu, new_nu), {"grad_norm": gnorm}

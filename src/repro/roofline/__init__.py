@@ -1,0 +1,3 @@
+from repro.roofline.analysis import (  # noqa: F401
+    HW, cell_roofline, flops_model, hbm_bytes_model, collective_bytes_model,
+)

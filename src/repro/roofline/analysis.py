@@ -1,0 +1,286 @@
+"""Roofline analysis for the dry-run cells (TPU v5e target).
+
+CPU container => no wall-clock MFU; the three roofline terms are *derived*:
+
+  compute term    = step FLOPs / (chips x 197 TFLOP/s bf16)
+  memory term     = step HBM bytes / (chips x 819 GB/s)
+  collective term = step wire bytes through a chip / 50 GB/s per link
+
+FLOPs/bytes come from an analytic per-block model (below) because XLA's
+``cost_analysis`` counts a ``lax.scan`` body once (verified empirically —
+DESIGN.md §7), which silently undercounts layer-stacked and chunk-scanned
+programs. The analytic model is validated against ``cost_analysis`` on an
+*unrolled* small-depth lowering (``validate_flops_model``), and the dry-run's
+parsed HLO collective inventory cross-checks which collectives the model
+should be counting.
+
+MODEL_FLOPS(6ND) is reported per cell along with MODEL/HLO — the fraction of
+executed compute that is "useful," exposing remat and attention overheads.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclass(frozen=True)
+class _HW:
+    peak_flops: float = 197e12       # bf16 FLOP/s per chip (v5e)
+    hbm_bw: float = 819e9            # bytes/s per chip
+    ici_bw: float = 50e9             # bytes/s per link (conservative 1 link)
+    hbm_bytes: float = 16 * 2 ** 30  # capacity per chip
+
+
+HW = _HW()
+
+_P_BYTES = 2          # bf16 params
+_A_BYTES = 2          # bf16 activations
+
+
+# ---------------------------------------------------------------------------
+# parameter counts
+# ---------------------------------------------------------------------------
+
+def _block_param_counts(cfg: ModelConfig, kind: str) -> tuple[float, float]:
+    """(total_params, active_params) for one block of ``kind``."""
+    d, f = cfg.d_model, cfg.d_ff
+    hd = cfg.resolved_head_dim
+    fe = cfg.moe_d_ff or f
+    if kind in ("attn", "attn_local", "moe"):
+        attn = d * cfg.num_heads * hd + 2 * d * cfg.num_kv_heads * hd \
+            + cfg.num_heads * hd * d
+        if kind == "moe":
+            routed = cfg.num_experts * 3 * d * fe
+            shared = cfg.num_shared_experts * 3 * d * fe
+            router = d * cfg.num_experts
+            total = attn + routed + shared + router
+            active = attn + cfg.top_k * 3 * d * fe + shared + router
+            return total, active
+        ffn = 3 * d * f
+        return attn + ffn, attn + ffn
+    if kind == "rec":
+        rec = 5 * d * d + cfg.conv_width * d     # w_x, w_gate, w_out, w_r, w_i
+        return rec + 3 * d * f, rec + 3 * d * f
+    # rwkv: 5 tmix proj + out  + lora (small) + channel mix
+    tmix = 5 * d * d + 2 * d * 32 * 6
+    cmix = 2 * d * f + d * d
+    return tmix + cmix, tmix + cmix
+
+
+def param_counts(cfg: ModelConfig) -> tuple[float, float]:
+    """(total, active) parameters including embeddings/head."""
+    total = active = 0.0
+    pattern = list(cfg.block_pattern) * cfg.num_units + list(cfg.leftover_pattern)
+    for kind in pattern:
+        t, a = _block_param_counts(cfg, kind)
+        total += t
+        active += a
+    emb = cfg.vocab_size * cfg.d_model
+    head = 0 if cfg.tie_embeddings else cfg.vocab_size * cfg.d_model
+    return total + emb + head, active + emb + head
+
+
+# ---------------------------------------------------------------------------
+# FLOPs model
+# ---------------------------------------------------------------------------
+
+def _block_flops_per_token(cfg: ModelConfig, kind: str, ctx: float,
+                           group_tokens: int = 0) -> float:
+    """Executed forward FLOPs for one token through one block; ``ctx`` =
+    attention context length (S/2 for causal training, cache length for
+    decode). MoE counts all E*C capacity slots (capacity_factor slop executes
+    whether or not a slot is filled — matches the slot-indexed dispatch)."""
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    fe = cfg.moe_d_ff or cfg.d_ff
+    _, active = _block_param_counts(cfg, kind)
+    if kind == "moe":
+        import math
+        routed = cfg.top_k * 3 * d * fe
+        if group_tokens:  # capacity rounds up per group (slot-indexed dispatch)
+            c = max(1, math.ceil(cfg.capacity_factor * group_tokens * cfg.top_k
+                                 / cfg.num_experts))
+            eff_cf = cfg.num_experts * c / (group_tokens * cfg.top_k)
+        else:
+            eff_cf = cfg.capacity_factor
+        active = active - routed + eff_cf * routed
+    flops = 2.0 * active                        # every active param = 1 MAC/token
+    if kind in ("attn", "attn_local", "moe"):
+        eff_ctx = min(ctx, cfg.window) if (kind == "attn_local" and cfg.window) else ctx
+        flops += 4.0 * cfg.num_heads * hd * eff_ctx   # QK^T + PV
+    elif kind == "rwkv":
+        flops += 6.0 * d * hd                    # state update + readout per head
+    elif kind == "rec":
+        flops += 12.0 * d                        # RG-LRU elementwise recurrence
+    return flops
+
+
+def _trunk_flops_per_token(cfg: ModelConfig, ctx: float,
+                           group_tokens: int = 0) -> float:
+    pattern = list(cfg.block_pattern) * cfg.num_units + list(cfg.leftover_pattern)
+    return sum(_block_flops_per_token(cfg, k, ctx, group_tokens) for k in pattern)
+
+
+def flops_model(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Step FLOPs (global) + MODEL_FLOPS (6·N_active·D) for the cell."""
+    b, s = shape.global_batch, shape.seq_len
+    total, active = param_counts(cfg)
+    if shape.kind == "train":
+        tokens = b * s
+        fwd = tokens * (_trunk_flops_per_token(cfg, s / 2, group_tokens=s)
+                        + 2.0 * cfg.d_model * cfg.vocab_size)
+        step = 4.0 * fwd                 # fwd + remat recompute + 2x bwd
+        model = 6.0 * active * tokens
+    elif shape.kind == "prefill":
+        tokens = b * s
+        step = tokens * _trunk_flops_per_token(cfg, s / 2, group_tokens=s) \
+            + b * 2.0 * cfg.d_model * cfg.vocab_size
+        model = 2.0 * active * tokens
+    else:  # decode: one token against a seq_len context
+        step = b * (_trunk_flops_per_token(cfg, s, group_tokens=1)
+                    + 2.0 * cfg.d_model * cfg.vocab_size)
+        model = 2.0 * active * b
+    return {"step_flops": step, "model_flops": model,
+            "useful_ratio": model / step}
+
+
+# ---------------------------------------------------------------------------
+# HBM traffic model (per chip)
+# ---------------------------------------------------------------------------
+
+def hbm_bytes_model(cfg: ModelConfig, shape: ShapeConfig, chips: int,
+                    accum: int = 1, moment_bytes: int = 4) -> float:
+    """Mandatory HBM bytes per chip per step.
+
+    train:  params read 3x (fwd + remat + bwd) x accum microbatches is wrong —
+            weights stream once per microbatch: 3 reads per microbatch; plus
+            optimizer read/write and gradient write; plus activation traffic.
+    decode: params once + KV cache read/write (the classic decode wall).
+    """
+    total, _ = param_counts(cfg)
+    p_loc = total * _P_BYTES / chips
+    b, s = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    if shape.kind == "train":
+        tokens_loc = b * s / chips
+        act = tokens_loc * d * _A_BYTES
+        n_layers = cfg.num_layers
+        param_traffic = p_loc * 3.0 * accum
+        opt_traffic = (total / chips) * (2 * moment_bytes * 2 + 2 * _P_BYTES + 4)
+        act_traffic = act * n_layers * 8.0       # r/w per block fwd+bwd+remat
+        return param_traffic + opt_traffic + act_traffic
+    if shape.kind == "prefill":
+        tokens_loc = b * s / chips
+        return p_loc + tokens_loc * d * _A_BYTES * cfg.num_layers * 4.0
+    # decode
+    cache_loc = _cache_bytes(cfg, shape) / chips
+    return p_loc + cache_loc + b * d * _A_BYTES * cfg.num_layers / chips
+
+
+def _cache_bytes(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    b, s = shape.global_batch, shape.seq_len
+    hd = cfg.resolved_head_dim
+    total = 0.0
+    pattern = list(cfg.block_pattern) * cfg.num_units + list(cfg.leftover_pattern)
+    for kind in pattern:
+        if kind in ("attn", "moe"):
+            total += 2 * b * s * cfg.num_kv_heads * hd * _A_BYTES
+        elif kind == "attn_local":
+            total += 2 * b * min(s, cfg.window) * cfg.num_kv_heads * hd * _A_BYTES
+        elif kind == "rec":
+            total += b * cfg.d_model * (cfg.conv_width) * _A_BYTES
+        else:  # rwkv
+            total += b * cfg.d_model * hd * 4    # fp32 wkv state
+    return total
+
+
+# ---------------------------------------------------------------------------
+# collective traffic model (per chip, wire bytes)
+# ---------------------------------------------------------------------------
+
+def collective_bytes_model(cfg: ModelConfig, shape: ShapeConfig, *,
+                           data: int = 16, model: int = 16, pods: int = 1,
+                           accum: int = 1, grad_bytes: int = 4,
+                           layout: str = "tp") -> dict:
+    """Wire bytes per chip per step, by mechanism.
+
+    layout="tp" (default): 2-D param sharding; 2 all-reduces per block over
+          ``model`` per token; params sharded over ``data`` all-gathered per
+          microbatch use (fwd + remat + bwd = 3x); grads reduce-scattered.
+    layout="fsdp_only": batch shards over data x model jointly; NO tensor
+          parallelism — every chip all-gathers the full weights 3x per step
+          and reduce-scatters grads over all chips (overlappable with
+          compute; the dominant term is latency-hidden in steady state).
+    DP:   multi-pod gradient all-reduce over ``pods``.
+    """
+    total, _ = param_counts(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    n_layers = cfg.num_layers
+    chips = data * model * pods
+
+    if shape.kind == "train":
+        if layout == "fsdp_only":
+            ways = data * model
+            fsdp = 3.0 * accum * total * _P_BYTES * (ways - 1) / ways
+            rs = total * grad_bytes * (ways - 1) / ways
+            dp = (2.0 * total * grad_bytes / ways) * (pods - 1) / pods
+            return {"fsdp_allgather": fsdp, "grad_reduce_scatter": rs,
+                    "tp_allreduce": 0.0, "pod_allreduce": dp,
+                    "total": fsdp + rs + dp}
+        # per chip: params it must receive = total/model_shard minus own piece
+        p_per_model_shard = total * _P_BYTES / model
+        fsdp = 3.0 * accum * p_per_model_shard * (data - 1) / data
+        rs = (total * grad_bytes / model) * (data - 1) / data
+        tokens_loc = b * s / (data * pods)       # per model-column
+        tp = 2 * n_layers * 2 * tokens_loc * d * _A_BYTES * 2 * (model - 1) / model
+        dp = (2.0 * total * grad_bytes / (model * data)) * (pods - 1) / pods
+        return {"fsdp_allgather": fsdp, "grad_reduce_scatter": rs,
+                "tp_allreduce": tp, "pod_allreduce": dp,
+                "total": fsdp + rs + tp + dp}
+    if shape.kind == "prefill":
+        p_per_model_shard = total * _P_BYTES / model
+        fsdp = p_per_model_shard * (data - 1) / data
+        tokens_loc = b * s / (data * pods) if b >= data * pods else b * s / pods
+        tp = 2 * n_layers * tokens_loc * d * _A_BYTES * 2 * (model - 1) / model
+        return {"fsdp_allgather": fsdp, "tp_allreduce": tp, "total": fsdp + tp}
+    # decode: weights stay sharded over model only (no FSDP gather in the
+    # steady state if params are replicated over data for serving); TP
+    # all-reduces per layer + flash-decode LSE combine (negligible bytes)
+    b_loc = max(b / (data * pods), 1)
+    tp = 2 * n_layers * b_loc * d * _A_BYTES * 2 * (model - 1) / model
+    lse = n_layers * b_loc * cfg.num_heads * 8 * 2   # max+sum scalars fp32
+    return {"tp_allreduce": tp, "lse_combine": lse, "total": tp + lse}
+
+
+# ---------------------------------------------------------------------------
+# cell roofline
+# ---------------------------------------------------------------------------
+
+def cell_roofline(cfg: ModelConfig, shape: ShapeConfig, *, chips: int = 256,
+                  data: int = 16, model: int = 16, pods: int = 1,
+                  accum: int = 1, moment_bytes: int = 4,
+                  layout: str = "tp") -> dict:
+    fl = flops_model(cfg, shape)
+    hbm = hbm_bytes_model(cfg, shape, chips, accum=accum,
+                          moment_bytes=moment_bytes)
+    coll = collective_bytes_model(cfg, shape, data=data, model=model,
+                                  pods=pods, accum=accum, layout=layout)
+    t_compute = fl["step_flops"] / (chips * HW.peak_flops)
+    t_memory = hbm / HW.hbm_bw
+    t_coll = coll["total"] / HW.ici_bw
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    t_bound = max(terms.values())
+    return {
+        **terms,
+        "bottleneck": bottleneck.replace("_s", ""),
+        "roofline_fraction": t_compute / t_bound if t_bound else 0.0,
+        "step_flops": fl["step_flops"],
+        "model_flops": fl["model_flops"],
+        "useful_ratio": fl["useful_ratio"],
+        "hbm_bytes_per_chip": hbm,
+        "collective_bytes_per_chip": coll,
+    }

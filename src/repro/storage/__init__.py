@@ -1,0 +1,1 @@
+from repro.storage.table import PagedTable  # noqa: F401

@@ -1,0 +1,130 @@
+"""PagedTable — the heap-file analogue backing a Hippo index.
+
+PostgreSQL stores tuples in fixed-size heap pages; Hippo summarizes *pages*.
+Here a page is a fixed-width row block of ``page_card`` tuples. The key
+attribute is a float32 column of shape (num_pages, page_card); additional
+payload columns ride along untouched. Mutations (insert/delete) are host-side
+numpy — the buffer-manager role — while queries operate on jnp device views.
+
+Deletions mark a validity bit and a per-page ``dirty`` flag, which is exactly
+the "note in the page header" PostgreSQL leaves for VACUUM (§5.2 / §7.1);
+``HippoIndex.vacuum`` consumes the dirty flags.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+import jax.numpy as jnp
+
+
+@dataclass
+class PagedTable:
+    page_card: int
+    capacity_pages: int
+    keys: np.ndarray = field(default=None)      # (capacity_pages, page_card) f32
+    valid: np.ndarray = field(default=None)     # (capacity_pages, page_card) bool
+    dirty: np.ndarray = field(default=None)     # (capacity_pages,) bool — VACUUM notes
+    num_pages: int = 0                          # pages in use (last may be partial)
+    fill: int = 0                               # tuples in the last page
+    payload: dict = field(default_factory=dict)  # name -> (capacity, page_card) array
+
+    def __post_init__(self):
+        if self.keys is None:
+            self.keys = np.zeros((self.capacity_pages, self.page_card), np.float32)
+        if self.valid is None:
+            self.valid = np.zeros((self.capacity_pages, self.page_card), bool)
+        if self.dirty is None:
+            self.dirty = np.zeros((self.capacity_pages,), bool)
+
+    # -- construction -------------------------------------------------------
+
+    @staticmethod
+    def from_values(values: np.ndarray, page_card: int, spare_pages: int = 0,
+                    payload: dict | None = None) -> "PagedTable":
+        values = np.asarray(values, np.float32).ravel()
+        n = values.size
+        num_pages = (n + page_card - 1) // page_card
+        cap = num_pages + spare_pages
+        t = PagedTable(page_card=page_card, capacity_pages=cap)
+        flat = t.keys.reshape(-1)
+        flat[:n] = values
+        vflat = t.valid.reshape(-1)
+        vflat[:n] = True
+        t.num_pages = num_pages
+        t.fill = n - (num_pages - 1) * page_card if n else 0
+        for name, col in (payload or {}).items():
+            buf = np.zeros((cap, page_card), np.asarray(col).dtype)
+            buf.reshape(-1)[:n] = np.asarray(col).ravel()
+            t.payload[name] = buf
+        return t
+
+    # -- properties ----------------------------------------------------------
+
+    @property
+    def cardinality(self) -> int:
+        return int(self.valid[: self.num_pages].sum())
+
+    def heap_nbytes(self) -> int:
+        """Bytes of live table storage (key column only, paper's table size)."""
+        return self.num_pages * self.page_card * 4
+
+    # -- device views --------------------------------------------------------
+
+    def device_keys(self, num_pages: int | None = None) -> jnp.ndarray:
+        n = self.num_pages if num_pages is None else num_pages
+        return jnp.asarray(self.keys[:n])
+
+    def device_valid(self, num_pages: int | None = None) -> jnp.ndarray:
+        n = self.num_pages if num_pages is None else num_pages
+        return jnp.asarray(self.valid[:n])
+
+    # -- mutations (host side = buffer manager) ------------------------------
+
+    def insert(self, value: float) -> tuple[int, bool]:
+        """Append one tuple; returns (page_id, is_new_page).
+
+        Appends to the last partially-filled page, else opens a new page —
+        matching heap-file append behaviour assumed by Algorithm 3.
+        """
+        new_page = self.fill == self.page_card or self.num_pages == 0
+        if new_page:
+            if self.num_pages == self.capacity_pages:
+                self._grow()
+            self.num_pages += 1
+            self.fill = 0
+        p = self.num_pages - 1
+        self.keys[p, self.fill] = np.float32(value)
+        self.valid[p, self.fill] = True
+        self.fill += 1
+        return p, new_page
+
+    def insert_batch(self, values: np.ndarray) -> tuple[int, int]:
+        """Vectorized append; returns (first_page_touched, last_page)."""
+        values = np.asarray(values, np.float32).ravel()
+        first = max(self.num_pages - 1, 0)
+        for v in values:  # page-boundary bookkeeping is trivial; keys are bulk-set below
+            self.insert(float(v))
+        return first, self.num_pages - 1
+
+    def delete_where(self, lo: float, hi: float) -> int:
+        """Mark tuples with key in [lo, hi] deleted; set page dirty notes."""
+        live = self.valid[: self.num_pages]
+        hit = live & (self.keys[: self.num_pages] >= lo) & (self.keys[: self.num_pages] <= hi)
+        npages = hit.any(axis=1)
+        self.valid[: self.num_pages] &= ~hit
+        self.dirty[: self.num_pages] |= npages
+        return int(hit.sum())
+
+    def clear_dirty(self, page_ids: np.ndarray) -> None:
+        self.dirty[page_ids] = False
+
+    def _grow(self) -> None:
+        add = max(self.capacity_pages // 2, 64)
+        self.keys = np.concatenate([self.keys, np.zeros((add, self.page_card), np.float32)])
+        self.valid = np.concatenate([self.valid, np.zeros((add, self.page_card), bool)])
+        self.dirty = np.concatenate([self.dirty, np.zeros((add,), bool)])
+        for name, buf in self.payload.items():
+            self.payload[name] = np.concatenate([buf, np.zeros((add, self.page_card), buf.dtype)])
+        self.capacity_pages += add

@@ -1,0 +1,66 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import bitmap as bm
+
+
+@pytest.mark.parametrize("num_bits", [1, 31, 32, 33, 400, 1600])
+def test_pack_unpack_roundtrip(num_bits):
+    rng = np.random.default_rng(num_bits)
+    bits = rng.random((4, num_bits)) < 0.3
+    packed = bm.from_bool(jnp.asarray(bits))
+    assert packed.shape == (4, bm.num_words(num_bits))
+    out = np.asarray(bm.to_bool(packed, num_bits))
+    np.testing.assert_array_equal(out, bits)
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=200))
+@settings(max_examples=50, deadline=None)
+def test_popcount_matches_sum(bits):
+    arr = np.asarray(bits, bool)
+    packed = bm.from_bool(jnp.asarray(arr))
+    assert int(bm.popcount(packed)) == int(arr.sum())
+
+
+@given(st.integers(1, 200), st.data())
+@settings(max_examples=50, deadline=None)
+def test_any_joint_matches_set_intersection(num_bits, data):
+    a = data.draw(st.lists(st.booleans(), min_size=num_bits, max_size=num_bits))
+    b = data.draw(st.lists(st.booleans(), min_size=num_bits, max_size=num_bits))
+    a, b = np.asarray(a, bool), np.asarray(b, bool)
+    pa, pb = bm.from_bool(jnp.asarray(a)), bm.from_bool(jnp.asarray(b))
+    assert bool(bm.any_joint(pa, pb)) == bool((a & b).any())
+
+
+def test_set_get_bit():
+    x = bm.zeros(100)
+    for i in [0, 31, 32, 63, 99]:
+        x = bm.set_bit(x, i)
+    for i in [0, 31, 32, 63, 99]:
+        assert int(bm.get_bit(x, i)) == 1
+    assert int(bm.get_bit(x, 50)) == 0
+    assert int(bm.popcount(x)) == 5
+
+
+def test_range_mask():
+    m = bm.range_mask(100, 10, 20)
+    bits = np.asarray(bm.to_bool(m, 100))
+    assert bits[10:21].all() and not bits[:10].any() and not bits[21:].any()
+
+
+def test_density():
+    bits = np.zeros(400, bool)
+    bits[:80] = True
+    packed = bm.from_bool(jnp.asarray(bits))
+    assert abs(float(bm.density(packed, 400)) - 0.2) < 1e-6
+
+
+@given(st.lists(st.integers(0, 2**32 - 1), min_size=0, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_rle_roundtrip(words):
+    arr = np.asarray(words, np.uint32)
+    out = bm.rle_decompress(bm.rle_compress(arr))
+    np.testing.assert_array_equal(out, arr)

@@ -1,0 +1,49 @@
+"""Equi-depth histogram properties (§4.1): balance, monotonicity, bucketize
+agreement with searchsorted semantics."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import histogram as hg
+
+
+def test_equi_depth_balance():
+    rng = np.random.default_rng(0)
+    sample = rng.exponential(10.0, 50_000)   # heavily skewed
+    hist = hg.build(jnp.asarray(sample), resolution=100)
+    ids = np.asarray(hg.bucketize(hist, jnp.asarray(sample)))
+    counts = np.bincount(ids, minlength=100)
+    # height-balanced: every bucket within 3x of the mean occupancy
+    assert counts.max() < 3 * counts.mean()
+    assert counts.min() > counts.mean() / 3
+
+
+def test_bounds_strictly_increasing_with_ties():
+    sample = np.repeat([1.0, 2.0, 3.0], 1000)   # massive ties
+    hist = hg.build(jnp.asarray(sample), resolution=32)
+    b = np.asarray(hist.bounds)
+    assert (np.diff(b) > 0).all()
+
+
+@given(st.integers(2, 128), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_bucketize_in_range(resolution, seed):
+    rng = np.random.default_rng(seed)
+    sample = rng.normal(0, 10, 500)
+    hist = hg.build(jnp.asarray(sample), resolution=resolution)
+    probes = rng.normal(0, 30, 200)  # includes out-of-range values
+    ids = np.asarray(hg.bucketize(hist, jnp.asarray(probes)))
+    assert (ids >= 0).all() and (ids < resolution).all()
+
+
+def test_hit_bucket_range_covers_predicate():
+    hist = hg.build_uniform(0.0, 100.0, 10)
+    b_lo, b_hi = hg.hit_bucket_range(hist, 25.0, 55.0)
+    # buckets are [0,10) [10,20) ... -> 25 in bucket 2, 55 in bucket 5
+    assert int(b_lo) == 2 and int(b_hi) == 5
+
+
+def test_uniform_histogram_boundaries():
+    hist = hg.build_uniform(0.0, 100.0, 4)
+    np.testing.assert_allclose(np.asarray(hist.bounds), [0, 25, 50, 75, 100])

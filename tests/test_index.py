@@ -1,0 +1,122 @@
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import bitmap as bm
+from repro.core import histogram as hg
+from repro.core.hippo import HippoIndex
+from repro.core.predicate import Predicate
+from repro.storage.table import PagedTable
+
+
+def make_index(values, page_card=8, resolution=32, density=0.25, **kw):
+    table = PagedTable.from_values(values, page_card=page_card, spare_pages=64)
+    return HippoIndex.create(table, resolution=resolution, density=density, **kw)
+
+
+def brute_force(table, lo, hi):
+    live = table.valid[: table.num_pages]
+    keys = table.keys[: table.num_pages]
+    return int((live & (keys >= lo) & (keys <= hi)).sum())
+
+
+def test_build_structure_invariants():
+    rng = np.random.default_rng(0)
+    values = rng.uniform(0, 1000, size=2000)
+    idx = make_index(values)
+    starts, ends, bitmaps = idx.entries_host()
+    # Entries partition [0, num_pages-1] contiguously and in order.
+    assert starts[0] == 0
+    assert ends[-1] == idx.table.num_pages - 1
+    np.testing.assert_array_equal(starts[1:], ends[:-1] + 1)
+    assert (ends >= starts).all()
+    # Each entry bitmap is non-empty; all but the trailing entry exceeded D.
+    pops = np.asarray(bm.popcount(jnp.asarray(bitmaps)))
+    assert (pops > 0).all()
+    dens = pops / idx.cfg.resolution
+    assert (dens[:-1] > idx.cfg.density).all()
+
+
+def test_entry_bitmap_matches_page_contents():
+    rng = np.random.default_rng(1)
+    values = rng.uniform(0, 100, size=600)
+    idx = make_index(values)
+    hist = idx.state.histogram
+    starts, ends, bitmaps = idx.entries_host()
+    keys = idx.table.keys[: idx.table.num_pages]
+    valid = idx.table.valid[: idx.table.num_pages]
+    ids = np.asarray(hg.bucketize(hist, jnp.asarray(keys.ravel()))).reshape(keys.shape)
+    for s, e, packed in zip(starts, ends, bitmaps):
+        expect = np.zeros(idx.cfg.resolution, bool)
+        blk = ids[s : e + 1][valid[s : e + 1]]
+        expect[blk] = True
+        got = np.asarray(bm.to_bool(jnp.asarray(packed), idx.cfg.resolution))
+        np.testing.assert_array_equal(got, expect)
+
+
+@pytest.mark.parametrize("dist", ["uniform", "skewed", "sorted", "lowcard"])
+def test_search_exact_vs_bruteforce(dist):
+    rng = np.random.default_rng(2)
+    n = 3000
+    if dist == "uniform":
+        values = rng.uniform(0, 1000, n)
+    elif dist == "skewed":
+        values = rng.exponential(50, n)
+    elif dist == "sorted":
+        values = np.sort(rng.uniform(0, 1000, n))
+    else:
+        values = rng.integers(0, 12, n).astype(float)
+    idx = make_index(values)
+    for lo, hi in [(0, 1000), (100, 110), (500, 500), (-5, -1), (900, 2000)]:
+        res = idx.search(Predicate.between(lo, hi))
+        assert int(res.count) == brute_force(idx.table, lo, hi), (dist, lo, hi)
+
+
+def test_search_compact_matches_dense():
+    rng = np.random.default_rng(3)
+    values = rng.uniform(0, 100, 1500)
+    idx = make_index(values)
+    pred = Predicate.between(10, 20)
+    dense = idx.search(pred)
+    count, inspected, truncated = idx.search_compact(pred)
+    assert int(count) == int(dense.count)
+    assert int(inspected) == int(dense.pages_inspected)
+    assert not bool(truncated)
+    # undersized capacity must flag truncation rather than silently undercount
+    _, _, trunc2 = idx.search_compact(pred, max_selected=1)
+    assert bool(trunc2)
+
+
+def test_false_positive_filtering_is_effective():
+    # Sorted data => contiguous buckets per entry => small range predicates
+    # should prune most pages (the paper's headline search behaviour).
+    values = np.linspace(0, 1000, 4000)
+    idx = make_index(values, resolution=64, density=0.2)
+    res = idx.search(Predicate.between(10, 20))
+    assert int(res.count) == brute_force(idx.table, 10, 20)
+    assert int(res.pages_inspected) < idx.table.num_pages * 0.2
+
+
+def test_equality_and_open_predicates():
+    rng = np.random.default_rng(4)
+    values = rng.uniform(0, 100, 1000)
+    idx = make_index(values)
+    v = float(values[123])
+    res = idx.search(Predicate.equality(v))
+    assert int(res.count) == brute_force(idx.table, v, v)
+    res = idx.search(Predicate.greater(50.0))
+    assert int(res.count) == int((values > 50.0).sum())
+    res = idx.search(Predicate.less(50.0).and_(Predicate.greater(25.0)))
+    assert int(res.count) == int(((values < 50.0) & (values > 25.0)).sum())
+
+
+def test_density_threshold_controls_entry_count():
+    rng = np.random.default_rng(5)
+    values = rng.uniform(0, 1000, 8000)
+    sizes = {}
+    for d in (0.2, 0.4, 0.8):
+        idx = make_index(values, resolution=400, density=d, page_card=50)
+        sizes[d] = idx.num_entries
+    # §6.2 Observation 1: higher density => fewer entries.
+    assert sizes[0.2] > sizes[0.4] > sizes[0.8]

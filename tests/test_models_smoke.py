@@ -1,0 +1,88 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward + one train step on CPU, asserting output shapes and no NaNs."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs
+from repro.models import transformer
+
+ARCHS = [
+    "llama4-maverick-400b-a17b", "qwen2-moe-a2.7b", "qwen2-vl-7b",
+    "musicgen-large", "recurrentgemma-9b", "yi-6b", "stablelm-3b",
+    "qwen2.5-3b", "smollm-360m", "rwkv6-3b",
+]
+
+B, S = 2, 32
+
+
+def make_batch(cfg, key):
+    kb, kl = jax.random.split(key)
+    if cfg.frontend == "tokens":
+        inputs = jax.random.randint(kb, (B, S), 0, cfg.vocab_size)
+    else:
+        inputs = jax.random.normal(kb, (B, S, cfg.d_model), jnp.float32)
+    labels = jax.random.randint(kl, (B, S), 0, cfg.vocab_size)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    return {"inputs": inputs, "labels": labels, "positions": positions}
+
+
+def test_registry_complete():
+    assert set(ARCHS) <= set(list_archs())
+    assert len(ARCHS) == 10
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(0)
+    params = transformer.init_params(cfg, key)
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+
+    logits = jax.jit(lambda p, b: transformer.forward(
+        cfg, p, b["inputs"], b["positions"]))(params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+
+    loss, grads = jax.jit(jax.value_and_grad(
+        lambda p: transformer.loss_fn(cfg, p, batch)))(params)
+    assert np.isfinite(float(loss))
+    flat = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.isfinite(g.astype(jnp.float32)).all()) for g in flat)
+    # loss is near log(vocab) at init (sanity of the head/loss wiring)
+    assert float(loss) < 2.5 * np.log(cfg.vocab_size)
+
+
+@pytest.mark.parametrize("arch", ["llama4-maverick-400b-a17b", "recurrentgemma-9b",
+                                  "rwkv6-3b", "qwen2-vl-7b"])
+def test_full_config_shapes_consistent(arch):
+    """Full (unreduced) configs are structurally valid: pattern divides depth
+    bookkeeping, head dims resolve, MoE divisibility recorded."""
+    cfg = get_config(arch)
+    assert cfg.num_units * cfg.unit_len + len(cfg.leftover_pattern) == cfg.num_layers
+    if cfg.num_heads:
+        assert cfg.resolved_head_dim * cfg.num_heads in (
+            cfg.d_model, cfg.num_heads * cfg.resolved_head_dim)
+        assert cfg.num_heads % max(cfg.num_kv_heads, 1) == 0
+
+
+def test_two_steps_reduce_loss_smollm():
+    """A couple of SGD steps on repeated data reduce the loss (end-to-end
+    trainability of the assembly)."""
+    cfg = get_config("smollm-360m").reduced()
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+
+    @jax.jit
+    def step(p):
+        loss, g = jax.value_and_grad(lambda q: transformer.loss_fn(cfg, q, batch))(p)
+        p = jax.tree_util.tree_map(lambda a, b: a - 0.05 * b, p, g)
+        return p, loss
+
+    losses = []
+    for _ in range(5):
+        params, loss = step(params)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0]

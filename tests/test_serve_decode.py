@@ -1,0 +1,97 @@
+"""Prefill + decode must reproduce the full-sequence forward exactly:
+logits(decode token t | cache of 0..t-1) == logits(forward(0..t))[:, t].
+
+MoE configs use a large capacity factor here so no tokens are dropped —
+capacity truncation legitimately differs between a (B*S)-token prefill and a
+B-token decode batch.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from dataclasses import replace
+
+from repro.configs import get_config
+from repro.models import serve, transformer
+
+ARCHS = [
+    "yi-6b",                    # GQA + rope
+    "stablelm-3b",              # layernorm + partial rotary + MHA
+    "qwen2.5-3b",               # qkv bias
+    "llama4-maverick-400b-a17b",  # interleaved MoE
+    "recurrentgemma-9b",        # RG-LRU + local attention
+    "rwkv6-3b",                 # attention-free
+    "musicgen-large",           # sinusoidal + frames frontend stub
+    "qwen2-vl-7b",              # M-RoPE + patches frontend stub
+]
+
+B, S = 2, 12
+
+
+def setup(arch):
+    cfg = get_config(arch).reduced()
+    if cfg.num_experts:
+        cfg = replace(cfg, capacity_factor=8.0)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    if cfg.frontend == "tokens":
+        inputs = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    else:
+        inputs = jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
+    return cfg, params, inputs
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    cfg, params, inputs = setup(arch)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    ref_logits = transformer.forward(cfg, params, inputs, positions, remat=False)
+
+    max_seq = S + 4
+    prompt = inputs[:, : S - 3]
+    pos_p = positions[:, : S - 3]
+    logits, cache = serve.prefill(cfg, params, prompt, pos_p, max_seq)
+    np.testing.assert_allclose(
+        np.asarray(logits, np.float32),
+        np.asarray(ref_logits[:, S - 4], np.float32), rtol=2e-4, atol=2e-4)
+
+    # three decode steps, each must match the teacher-forced forward
+    for t in range(S - 3, S):
+        tok = inputs[:, t : t + 1]
+        logits, cache = serve.decode_step(cfg, params, cache, tok, jnp.int32(t))
+        np.testing.assert_allclose(
+            np.asarray(logits, np.float32),
+            np.asarray(ref_logits[:, t], np.float32), rtol=2e-4, atol=2e-4,
+            err_msg=f"{arch} decode step {t}")
+
+
+def test_local_window_rolling_buffer():
+    """Decode past the window: rolling KV buffer must match full forward
+    (local attention only ever sees the last `window` tokens anyway)."""
+    cfg = get_config("recurrentgemma-9b").reduced()
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    total = cfg.window * 2 + 5   # decode well past the window
+    inputs = jax.random.randint(jax.random.PRNGKey(1), (1, total), 0, cfg.vocab_size)
+    positions = jnp.arange(total)[None, :]
+    ref = transformer.forward(cfg, params, inputs, positions, remat=False)
+
+    s0 = cfg.window + 2
+    logits, cache = serve.prefill(cfg, params, inputs[:, :s0], positions[:, :s0],
+                                  max_seq=total)
+    for t in range(s0, total):
+        logits, cache = serve.decode_step(cfg, params, cache,
+                                          inputs[:, t : t + 1], jnp.int32(t))
+        np.testing.assert_allclose(np.asarray(logits, np.float32),
+                                   np.asarray(ref[:, t], np.float32),
+                                   rtol=3e-4, atol=3e-4, err_msg=f"t={t}")
+
+
+def test_generate_roundtrip():
+    cfg = get_config("smollm-360m").reduced()
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab_size)
+    out = serve.generate(cfg, params, prompt, num_steps=6, max_seq=20)
+    assert out.shape == (2, 6)
+    assert bool((out >= 0).all()) and bool((out < cfg.vocab_size).all())

@@ -1,0 +1,54 @@
+"""End-to-end system tests: the training driver through the full stack
+(Hippo-indexed data -> sharded steps -> checkpoint/restart), asserting loss
+decrease and exact restart determinism."""
+import numpy as np
+
+from repro.launch import train as train_driver
+
+
+def test_train_driver_loss_decreases(tmp_path):
+    losses = train_driver.main([
+        "--arch", "smollm-360m", "--reduced",
+        "--steps", "30", "--batch", "8", "--seq", "32",
+        "--lr", "3e-3", "--ckpt-dir", str(tmp_path / "ck"),
+        "--ckpt-every", "10",
+    ])
+    assert len(losses) == 30
+    assert losses[-1] < losses[0]
+    assert all(np.isfinite(l) for l in losses)
+
+
+def test_restart_reproduces_trajectory(tmp_path):
+    """Kill-and-resume must replay the exact same loss curve: checkpoints +
+    the stateless step->batch mapping make restarts bit-deterministic."""
+    ck = str(tmp_path / "ck2")
+    full = train_driver.main([
+        "--arch", "smollm-360m", "--reduced",
+        "--steps", "20", "--batch", "4", "--seq", "32",
+        "--ckpt-dir", str(tmp_path / "full"), "--ckpt-every", "50",
+    ])
+    # run to step 10 under the SAME 20-step schedule (simulated preemption),
+    # then resume to 20
+    train_driver.main([
+        "--arch", "smollm-360m", "--reduced",
+        "--steps", "20", "--batch", "4", "--seq", "32",
+        "--ckpt-dir", ck, "--ckpt-every", "10", "--stop-after", "10",
+    ])
+    resumed = train_driver.main([
+        "--arch", "smollm-360m", "--reduced",
+        "--steps", "20", "--batch", "4", "--seq", "32",
+        "--ckpt-dir", ck, "--ckpt-every", "10", "--resume",
+    ])
+    # resumed run re-executes steps 10..19; compare against the tail of the
+    # uninterrupted run
+    np.testing.assert_allclose(resumed[-5:], full[-5:], rtol=1e-4)
+
+
+def test_serve_driver_end_to_end():
+    finished = __import__("repro.launch.serve", fromlist=["main"]).main([
+        "--arch", "smollm-360m", "--reduced",
+        "--requests", "3", "--batch", "2",
+        "--prompt-len", "8", "--gen", "6",
+    ])
+    assert len(finished) == 3
+    assert all(len(r.generated) >= 6 for r in finished)

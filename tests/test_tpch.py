@@ -1,0 +1,42 @@
+"""TPC-H workload module: query correctness through the Hippo access path."""
+import numpy as np
+
+from repro.storage import tpch
+
+
+def setup_module(module):
+    module.li = tpch.generate_lineitem(30_000, seed=5)
+    module.idx = tpch.build_shipdate_index(module.li, resolution=200, density=0.2)
+
+
+def test_selectivity_window_is_calibrated():
+    lo, hi = tpch.selectivity_window(0.01)
+    frac = ((li.shipdate >= lo) & (li.shipdate <= hi)).mean()
+    assert abs(frac - 0.01) < 0.005
+
+
+def test_q6_exact_vs_bruteforce():
+    lo, hi = tpch.selectivity_window(0.02)
+    got = tpch.q6(li, idx, lo, hi)
+    m = ((li.shipdate >= lo) & (li.shipdate <= hi) & (li.discount >= 0.05)
+         & (li.discount <= 0.07) & (li.quantity < 24))
+    want = float((li.extendedprice[m] * li.discount[m]).sum())
+    assert abs(got - want) <= 1e-3 * max(abs(want), 1.0)
+
+
+def test_q15_top_supplier_matches_numpy():
+    lo, hi = tpch.selectivity_window(0.05)
+    supp, rev = tpch.q15(li, idx, lo, hi)
+    m = (li.shipdate >= lo) & (li.shipdate <= hi)
+    acc = np.zeros(10_000)
+    np.add.at(acc, li.suppkey[m].astype(np.int64),
+              (li.extendedprice[m] * (1 - li.discount[m])).astype(np.float64))
+    assert supp == int(acc.argmax())
+    assert abs(rev - float(acc.max())) < 1e-6 * max(acc.max(), 1.0)
+
+
+def test_q20_returns_sane_count():
+    lo, hi = tpch.selectivity_window(0.05)
+    n = tpch.q20(li, idx, lo, hi)
+    total = int(((li.shipdate >= lo) & (li.shipdate <= hi)).sum())
+    assert 0 <= n <= total
