@@ -13,6 +13,7 @@ import time
 
 from benchmarks import (
     bench_cost_model,
+    bench_engine_throughput,
     bench_fig6_overhead,
     bench_fig7_selectivity,
     bench_fig8_density,
@@ -38,6 +39,9 @@ SUITES = {
     "maintenance": lambda quick: bench_maintenance.run(
         card=50_000 if quick else bench_maintenance.CARD),
     "kernels": lambda quick: bench_kernels.run(),
+    "engine": lambda quick: bench_engine_throughput.run(
+        card=50_000 if quick else bench_engine_throughput.CARD,
+        batches=(8, 64) if quick else bench_engine_throughput.BATCHES),
 }
 
 

@@ -22,7 +22,8 @@ import jax.numpy as jnp
 
 from repro.core import histogram as hg
 from repro.core import index as hix
-from repro.core.predicate import Predicate, to_bucket_bitmap
+from repro.core.predicate import (Predicate, intervals, to_bucket_bitmap,
+                                  to_bucket_bitmaps)
 from repro.storage.table import PagedTable
 
 
@@ -58,6 +59,10 @@ class HippoIndex:
         cfg = hix.HippoConfig(resolution=resolution, density=density,
                               page_card=table.page_card, max_slots=max_slots,
                               relocate_on_update=relocate_on_update)
+        if hist is None and table.num_pages == 0:
+            raise ValueError(
+                "empty table: pass an explicit hist (the complete histogram "
+                "is DBMS-maintained and cannot be sampled from zero tuples)")
         if hist is None:
             live = table.keys[: table.num_pages][table.valid[: table.num_pages]]
             if live.size > sample_size:
@@ -71,26 +76,54 @@ class HippoIndex:
 
     def search(self, pred: Predicate) -> hix.SearchResult:
         qbm = to_bucket_bitmap(pred, self.state.histogram)
+        los, his = intervals([pred])
         return hix.search(self.state, qbm, self.table.device_keys(),
-                          self.table.device_valid(),
-                          jnp.float32(max(pred.lo, -3.4e38)),
-                          jnp.float32(min(pred.hi, 3.4e38)))
+                          self.table.device_valid(), los[0], his[0])
+
+    def search_batch(self, preds: list[Predicate]) -> hix.BatchSearchResult:
+        """Batched Algorithm 1: Q predicates in one device program.
+
+        Row q of the result equals the corresponding ``search(preds[q])``
+        scalars; see ``runtime.engine.QueryEngine`` for the queued/slotted
+        serving front over this path.
+        """
+        qbms = to_bucket_bitmaps(preds, self.state.histogram)
+        los, his = intervals(preds)
+        return hix.search_many(self.state, qbms, self.table.device_keys(),
+                               self.table.device_valid(), los, his)
 
     def search_compact(self, pred: Predicate, max_selected: int | None = None):
         """Gather-path search. Returns (count, pages_inspected, truncated)."""
         qbm = to_bucket_bitmap(pred, self.state.histogram)
         if max_selected is None:
             max_selected = self.table.num_pages
+        los, his = intervals([pred])
         return hix.search_compact(self.state, qbm, self.table.device_keys(),
-                                  self.table.device_valid(),
-                                  jnp.float32(max(pred.lo, -3.4e38)),
-                                  jnp.float32(min(pred.hi, 3.4e38)),
+                                  self.table.device_valid(), los[0], his[0],
                                   max_selected=max_selected)
 
     # -- maintenance -----------------------------------------------------------
 
+    def _require_slot_capacity(self, needed: int = 1) -> None:
+        """Refuse maintenance that would overflow the physical slot array.
+
+        The jit'd update paths cannot raise; an out-of-capacity scatter would
+        silently drop writes and corrupt the sorted list. Checked here, before
+        any table or index state changes.
+        """
+        if int(self.state.num_slots) + needed > self.cfg.max_slots:
+            raise RuntimeError(
+                f"index at slot capacity ({int(self.state.num_slots)}/"
+                f"{self.cfg.max_slots}); rebuild with a larger max_slots")
+
     def insert(self, value: float) -> None:
         """Eager single-tuple insert: table append + Algorithm 3 update."""
+        opens_page = (self.table.fill == self.table.page_card
+                      or self.table.num_pages == 0)
+        if opens_page or self.cfg.relocate_on_update:
+            # Only the new-entry and relocation paths consume a slot;
+            # in-place bit updates never do.
+            self._require_slot_capacity()
         page_id, _ = self.table.insert(value)
         before = int(self.state.num_entries)
         self.state = hix.insert_tuple(self.cfg, self.state, jnp.float32(value),
@@ -100,13 +133,28 @@ class HippoIndex:
         self.counters.entries_created += int(self.state.num_entries) - before
 
     def insert_batch(self, values: np.ndarray) -> None:
-        """Vectorized insert (beyond-paper fast path).
+        """Vectorized insert (beyond-paper fast path). Atomic: either the
+        whole batch lands or, on slot-capacity exhaustion, table and index
+        are rolled back to their pre-batch snapshot before the raise.
 
         Tuples landing on already-summarized pages take one fused scatter;
         tuples opening new pages replay the eager path (they are few: at most
         one page per page_card tuples).
         """
         values = np.asarray(values, np.float32).ravel()
+        if values.size == 0:
+            return
+        snap_state = self.state
+        snap_pages, snap_fill = self.table.num_pages, self.table.fill
+        try:
+            self._insert_batch_apply(values)
+        except RuntimeError:
+            self.state = snap_state
+            self.table.truncate_to(snap_pages, snap_fill)
+            raise
+        self.counters.inserts += len(values)
+
+    def _insert_batch_apply(self, values: np.ndarray) -> None:
         pages = []
         for v in values:
             pid, _ = self.table.insert(float(v))
@@ -114,14 +162,18 @@ class HippoIndex:
         pages = np.asarray(pages, np.int32)
         old_mask = pages <= int(self.state.summarized_until)
         if old_mask.any():
-            # full batch passed with a mask => one stable jit shape per N
+            # full batch passed with a mask => one stable jit shape per N;
+            # the fused scatter never relocates, so it consumes no slots
             self.state = hix.insert_batch_existing(
                 self.cfg, self.state, jnp.asarray(values),
                 jnp.asarray(pages), jnp.asarray(old_mask))
         for v, p in zip(values[~old_mask], pages[~old_mask]):
+            # only page-opening creates and (with relocation) eager updates
+            # can consume a slot — check per tuple, at actual need
+            if self.cfg.relocate_on_update or p > int(self.state.summarized_until):
+                self._require_slot_capacity()
             self.state = hix.insert_tuple(self.cfg, self.state, jnp.float32(v),
                                           jnp.int32(p))
-        self.counters.inserts += len(values)
 
     def vacuum(self) -> int:
         """Lazy maintenance after deletes (§5.2): re-summarize entries whose

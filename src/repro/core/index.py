@@ -76,6 +76,19 @@ class SearchResult(NamedTuple):
     entries_matched: jnp.ndarray  # scalar i32
 
 
+class BatchSearchResult(NamedTuple):
+    """Per-query results of ``search_many`` (query axis Q leads).
+
+    ``qualified`` is intentionally omitted: a (Q, P, C) tuple mask is the one
+    output whose memory scales with Q×table size; counts and page masks carry
+    the paper's metrics and the engine's result payload.
+    """
+    counts: jnp.ndarray           # (Q,) i32
+    page_mask: jnp.ndarray        # (Q, num_pages) bool
+    pages_inspected: jnp.ndarray  # (Q,) i32
+    entries_matched: jnp.ndarray  # (Q,) i32
+
+
 # ---------------------------------------------------------------------------
 # Build (§4, Algorithm 2)
 # ---------------------------------------------------------------------------
@@ -88,9 +101,14 @@ def build(cfg: HippoConfig, hist: Histogram, keys: jnp.ndarray,
     host finalize. Returns a fixed-capacity ``HippoState``.
     """
     num_pages = keys.shape[0]
-    page_bits = grouping.page_bucket_bits(hist, keys, valid, cfg.resolution)
-    flags, merged = grouping.group_pages(page_bits, cfg.resolution, cfg.density)
-    starts, ends, packed = grouping.finalize_entries(np.asarray(flags), np.asarray(merged))
+    if num_pages == 0:
+        # Empty table: zero-entry index; Algorithm 3 grows it on first insert.
+        starts = ends = np.zeros((0,), np.int32)
+        packed = np.zeros((0, cfg.words), np.uint32)
+    else:
+        page_bits = grouping.page_bucket_bits(hist, keys, valid, cfg.resolution)
+        flags, merged = grouping.group_pages(page_bits, cfg.resolution, cfg.density)
+        starts, ends, packed = grouping.finalize_entries(np.asarray(flags), np.asarray(merged))
     e = starts.shape[0]
     if e > cfg.max_slots:
         raise ValueError(f"built {e} entries > max_slots {cfg.max_slots}; raise capacity")
@@ -142,6 +160,26 @@ def locate_slot(state: HippoState, page_id) -> tuple[jnp.ndarray, jnp.ndarray]:
     return state.sorted_order[pos], pos
 
 
+def _expand_page_mask(state: HippoState, match: jnp.ndarray,
+                      num_pages: int) -> jnp.ndarray:
+    """Expand matched entry page-ranges to a page bitmap (Bitmap b, Alg. 1).
+
+    Boundary deltas at each matched entry's [start, end] + prefix sum; entries
+    partition the page space, dead slots carry INT32_MAX bounds (clipped to
+    the dropped ``num_pages`` column) and zero match. ``match`` is (S,) or
+    (Q, S); the result matches with shape (num_pages,) or (Q, num_pages).
+    """
+    m = match.astype(jnp.int32)
+    squeeze = m.ndim == 1
+    if squeeze:
+        m = m[None]
+    delta = jnp.zeros((m.shape[0], num_pages + 1), jnp.int32)
+    delta = delta.at[:, jnp.clip(state.starts, 0, num_pages)].add(m, mode="drop")
+    delta = delta.at[:, jnp.clip(state.ends + 1, 0, num_pages)].add(-m, mode="drop")
+    page_mask = jnp.cumsum(delta[:, :num_pages], axis=1) > 0
+    return page_mask[0] if squeeze else page_mask
+
+
 @partial(jax.jit, static_argnames=())
 def search(state: HippoState, query_bitmap: jnp.ndarray, keys: jnp.ndarray,
            valid: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray) -> SearchResult:
@@ -155,12 +193,7 @@ def search(state: HippoState, query_bitmap: jnp.ndarray, keys: jnp.ndarray,
     live = state.slot_live & (jnp.arange(s) < state.num_slots)
     # Step 2 — bit-level parallel joint-bucket test (Fig. 3).
     match = bm.any_joint(state.bitmaps, query_bitmap[None, :]) & live
-    # Expand matched page ranges to a page bitmap (Bitmap b in Alg. 1) via
-    # boundary deltas + prefix sum (entries partition the page space).
-    delta = jnp.zeros((num_pages + 1,), jnp.int32)
-    delta = delta.at[jnp.clip(state.starts, 0, num_pages)].add(match.astype(jnp.int32), mode="drop")
-    delta = delta.at[jnp.clip(state.ends + 1, 0, num_pages)].add(-match.astype(jnp.int32), mode="drop")
-    page_mask = jnp.cumsum(delta[:num_pages]) > 0
+    page_mask = _expand_page_mask(state, match, num_pages)
     # Step 3 — inspect possible qualified pages tuple-by-tuple (vectorized).
     v = keys.astype(jnp.float32)
     qualified = page_mask[:, None] & valid & (v >= lo) & (v <= hi)
@@ -170,6 +203,38 @@ def search(state: HippoState, query_bitmap: jnp.ndarray, keys: jnp.ndarray,
         page_mask=page_mask,
         pages_inspected=page_mask.sum(dtype=jnp.int32),
         entries_matched=match.sum(dtype=jnp.int32),
+    )
+
+
+@partial(jax.jit, static_argnames=())
+def search_many(state: HippoState, query_bitmaps: jnp.ndarray, keys: jnp.ndarray,
+                valid: jnp.ndarray, los: jnp.ndarray, his: jnp.ndarray,
+                ) -> BatchSearchResult:
+    """Algorithm 1 over a batch of Q predicates in one device program.
+
+    query_bitmaps: (Q, W) packed query bitmaps; los/his: (Q,) predicate
+    intervals. The entry-match and range-expand steps of ``search`` gain a
+    leading query axis — one (Q, S) joint-bucket AND, one batched scatter into
+    (Q, P+1) boundary deltas, one row-wise prefix sum — so Q queries cost one
+    dispatch instead of Q. Row q of every output is bit-identical to the
+    scalars ``search`` returns for predicate q.
+    """
+    num_pages = keys.shape[0]
+    s = state.bitmaps.shape[0]
+    live = state.slot_live & (jnp.arange(s) < state.num_slots)
+    # Step 2, batched: joint-bucket test of every query against every entry.
+    match = bm.any_joint(query_bitmaps[:, None, :], state.bitmaps[None, :, :])
+    match = match & live[None, :]                                   # (Q, S)
+    page_mask = _expand_page_mask(state, match, num_pages)          # (Q, P)
+    # Step 3, batched: inspect possible qualified pages for every query.
+    v = keys.astype(jnp.float32)[None]
+    qualified = (page_mask[:, :, None] & valid[None]
+                 & (v >= los[:, None, None]) & (v <= his[:, None, None]))
+    return BatchSearchResult(
+        counts=qualified.sum(axis=(1, 2), dtype=jnp.int32),
+        page_mask=page_mask,
+        pages_inspected=page_mask.sum(axis=1, dtype=jnp.int32),
+        entries_matched=match.sum(axis=1, dtype=jnp.int32),
     )
 
 
@@ -188,10 +253,7 @@ def search_compact(state: HippoState, query_bitmap: jnp.ndarray, keys: jnp.ndarr
     s = state.bitmaps.shape[0]
     live = state.slot_live & (jnp.arange(s) < state.num_slots)
     match = bm.any_joint(state.bitmaps, query_bitmap[None, :]) & live
-    delta = jnp.zeros((num_pages + 1,), jnp.int32)
-    delta = delta.at[jnp.clip(state.starts, 0, num_pages)].add(match.astype(jnp.int32), mode="drop")
-    delta = delta.at[jnp.clip(state.ends + 1, 0, num_pages)].add(-match.astype(jnp.int32), mode="drop")
-    page_mask = jnp.cumsum(delta[:num_pages]) > 0
+    page_mask = _expand_page_mask(state, match, num_pages)
     n_sel = page_mask.sum(dtype=jnp.int32)
     sel = jnp.nonzero(page_mask, size=max_selected, fill_value=num_pages)[0]
     in_range = sel < num_pages

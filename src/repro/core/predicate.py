@@ -8,13 +8,14 @@ attribute, so the converted bitmap is a contiguous run of set bits.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Sequence
 
 import numpy as np
 
 import jax.numpy as jnp
 
 from repro.core import bitmap as bm
-from repro.core.histogram import Histogram, hit_bucket_range
+from repro.core.histogram import Histogram, bucketize
 
 _INF = float("inf")
 
@@ -58,20 +59,54 @@ class Predicate:
         return (self.lo, self.hi)
 
 
+_F32_MAX = 3.4e38   # finite clamp for ±inf predicate endpoints
+
+
+def _finite_bounds(preds: Sequence[Predicate]) -> tuple[np.ndarray, np.ndarray]:
+    """Predicate intervals as finite float32 host arrays (one clamp rule for
+    every conversion and inspection path)."""
+    los = np.asarray([max(p.lo, -_F32_MAX) for p in preds], np.float32)
+    his = np.asarray([min(p.hi, _F32_MAX) for p in preds], np.float32)
+    return los, his
+
+
 def to_bucket_bitmap(pred: Predicate, hist: Histogram) -> jnp.ndarray:
     """Convert a predicate to the packed bitmap of hit buckets (§3.1, Fig. 2).
 
     Returns a (W,) uint32 packed bitmap; at least one bucket is always hit for
     a non-empty predicate (SF*H >= 1 in the paper's cost model, §6.1).
     """
+    return to_bucket_bitmaps([pred], hist)[0]
+
+
+def intervals(preds: Sequence[Predicate]) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(los, his) float32 device arrays for a batch of predicates.
+
+    Infinities are clamped to the float32 range so the inspection compares
+    stay finite; an empty predicate keeps lo > hi and matches nothing.
+    """
+    los, his = _finite_bounds(preds)
+    return jnp.asarray(los), jnp.asarray(his)
+
+
+def to_bucket_bitmaps(preds: Sequence[Predicate], hist: Histogram) -> jnp.ndarray:
+    """Batched §3.1 conversion: Q predicates -> (Q, W) packed query bitmaps.
+
+    One vectorized bucketize of all 2Q interval endpoints replaces Q separate
+    conversions; empty predicates produce all-zero rows. The scalar
+    ``to_bucket_bitmap`` is this with Q=1, so the paths agree by construction.
+    """
     h = hist.resolution
-    if pred.empty:
-        return bm.zeros(h)
-    span = hist.bounds[-1] - hist.bounds[0]
-    lo = jnp.clip(jnp.float32(max(pred.lo, -3.4e38)), hist.bounds[0] - span, hist.bounds[-1] + span)
-    hi = jnp.clip(jnp.float32(min(pred.hi, 3.4e38)), hist.bounds[0] - span, hist.bounds[-1] + span)
-    b_lo, b_hi = hit_bucket_range(hist, lo, hi)
-    return bm.range_mask(h, b_lo, b_hi)
+    if not preds:
+        return bm.zeros(h, 0)
+    los, his = _finite_bounds(preds)
+    b_lo = bucketize(hist, jnp.asarray(los))             # (Q,)
+    b_hi = bucketize(hist, jnp.asarray(his))             # (Q,)
+    nonempty = jnp.asarray([not p.empty for p in preds])
+    idx = jnp.arange(bm.num_words(h) * bm.WORD_BITS, dtype=jnp.int32)
+    bits = ((idx[None, :] >= b_lo[:, None]) & (idx[None, :] <= b_hi[:, None])
+            & (idx[None, :] < h) & nonempty[:, None])
+    return bm.from_bool(bits)
 
 
 def matches(pred: Predicate, values: jnp.ndarray) -> jnp.ndarray:

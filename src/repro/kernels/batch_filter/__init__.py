@@ -1,0 +1,1 @@
+from repro.kernels.batch_filter.ops import batch_filter  # noqa: F401

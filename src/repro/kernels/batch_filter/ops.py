@@ -1,0 +1,44 @@
+"""Public wrapper: pads to kernel tiling, handles CPU interpret fallback."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.batch_filter.kernel import (BLOCK_E, BLOCK_Q,
+                                               batch_filter_kernel)
+from repro.kernels.batch_filter.ref import batch_filter_ref
+
+
+def _pad_to(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def batch_filter(queries: jnp.ndarray, entries: jnp.ndarray,
+                 interpret: bool | None = None) -> jnp.ndarray:
+    """Joint-bucket test of every query bitmap against every entry bitmap.
+
+    queries: (Q, W) uint32, entries: (E, W) uint32 -> (Q, E) int32 0/1.
+    On CPU backends runs the Pallas kernel in interpret mode.
+    """
+    q, w = queries.shape
+    e, _ = entries.shape
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    qp = _pad_to(queries, 0, BLOCK_Q)
+    qp = _pad_to(qp, 1, 128)
+    ep = _pad_to(entries, 0, BLOCK_E)
+    ep = _pad_to(ep, 1, 128)
+    out = batch_filter_kernel(qp, ep, interpret=interpret)
+    return out[:q, :e]
+
+
+__all__ = ["batch_filter", "batch_filter_ref"]

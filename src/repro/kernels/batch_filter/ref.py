@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the batch_filter kernel."""
+import jax.numpy as jnp
+
+
+def batch_filter_ref(queries: jnp.ndarray, entries: jnp.ndarray) -> jnp.ndarray:
+    """queries: (Q, W) uint32; entries: (E, W) uint32 -> (Q, E) int32 0/1."""
+    return jnp.any((queries[:, None, :] & entries[None, :, :]) != 0,
+                   axis=-1).astype(jnp.int32)

@@ -1,0 +1,118 @@
+"""Batched multi-predicate query engine — the serving front for Hippo search.
+
+Mirrors ``launch/serve.py``'s lock-step batch server: queries arrive as
+``Predicate``s, get admitted into a fixed number of slots, execute together in
+one device program (``core.index.search_many``), and finished queries free
+their slot for the next queued request. The fixed slot count keeps every
+``run_batch`` at one stable jit shape — (batch, W) bitmaps, (batch,) interval
+bounds — so the trace is compiled once and recycled for the life of the engine.
+
+    engine = QueryEngine(idx, batch=64)
+    tickets = [engine.submit(p) for p in preds]
+    engine.drain()
+    counts = [t.count for t in tickets]
+
+Free slots in a partially-filled batch are padded with the empty predicate
+(lo > hi), which converts to an all-zero query bitmap and matches nothing —
+the query analogue of a recycled decode slot idling on a pad token.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.predicate import Predicate
+
+_EMPTY = Predicate(lo=1.0, hi=0.0)   # lo > hi: matches nothing
+
+
+@dataclass
+class QueryTicket:
+    """One submitted predicate and, once its batch ran, its results."""
+    qid: int
+    pred: Predicate
+    count: int | None = None
+    pages_inspected: int | None = None
+    entries_matched: int | None = None
+    done: bool = False
+
+
+@dataclass
+class EngineStats:
+    submitted: int = 0
+    served: int = 0
+    batches: int = 0
+    slots_filled: int = 0    # occupancy numerator; batches * batch is the denominator
+
+
+class QueryEngine:
+    """Lock-step batched query executor with slot recycling."""
+
+    def __init__(self, index, batch: int = 64):
+        if batch < 1:
+            raise ValueError(f"batch must be >= 1, got {batch}")
+        self.index = index
+        self.batch = batch
+        self.slots: list[QueryTicket | None] = [None] * batch
+        self.queue: list[QueryTicket] = []
+        self.stats = EngineStats()
+        self._next_qid = 0
+
+    # -- admission (mirrors BatchServer.admit) -------------------------------
+
+    def submit(self, pred: Predicate) -> QueryTicket:
+        """Enqueue a predicate; returns its ticket (filled in by run_batch)."""
+        t = QueryTicket(qid=self._next_qid, pred=pred)
+        self._next_qid += 1
+        self.stats.submitted += 1
+        self.queue.append(t)
+        return t
+
+    def _admit(self) -> None:
+        for i in range(self.batch):
+            if self.slots[i] is None and self.queue:
+                self.slots[i] = self.queue.pop(0)
+
+    # -- execution ------------------------------------------------------------
+
+    def run_batch(self) -> list[QueryTicket]:
+        """Admit queued queries into free slots and execute one device program.
+
+        Returns the tickets retired by this batch (empty if nothing pending).
+        """
+        self._admit()
+        active = [i for i, t in enumerate(self.slots) if t is not None]
+        if not active:
+            return []
+        preds = [t.pred if t is not None else _EMPTY for t in self.slots]
+        res = self.index.search_batch(preds)
+        counts = np.asarray(res.counts)
+        inspected = np.asarray(res.pages_inspected)
+        matched = np.asarray(res.entries_matched)
+        finished = []
+        for i in active:
+            t = self.slots[i]
+            t.count = int(counts[i])
+            t.pages_inspected = int(inspected[i])
+            t.entries_matched = int(matched[i])
+            t.done = True
+            finished.append(t)
+            self.slots[i] = None          # recycle the slot
+        self.stats.batches += 1
+        self.stats.slots_filled += len(active)
+        self.stats.served += len(finished)
+        return finished
+
+    def drain(self) -> list[QueryTicket]:
+        """Run batches until the queue and all slots are empty."""
+        finished = []
+        while self.queue or any(t is not None for t in self.slots):
+            finished.extend(self.run_batch())
+        return finished
+
+    def run_all(self, preds: list[Predicate]) -> np.ndarray:
+        """Submit + drain convenience; counts in submission order."""
+        tickets = [self.submit(p) for p in preds]
+        self.drain()
+        return np.asarray([t.count for t in tickets], np.int64)

@@ -29,6 +29,7 @@ class PagedTable:
     num_pages: int = 0                          # pages in use (last may be partial)
     fill: int = 0                               # tuples in the last page
     payload: dict = field(default_factory=dict)  # name -> (capacity, page_card) array
+    _dev: tuple | None = field(default=None, repr=False, compare=False)  # device-view cache
 
     def __post_init__(self):
         if self.keys is None:
@@ -72,13 +73,21 @@ class PagedTable:
 
     # -- device views --------------------------------------------------------
 
+    def _device_views(self, n: int) -> tuple:
+        """(keys, valid) device arrays for the first ``n`` pages, cached until
+        the next host-side mutation — a query-heavy loop (the batched engine)
+        pays one H2D transfer per mutation, not per batch."""
+        if self._dev is None or self._dev[0] != n:
+            self._dev = (n, jnp.asarray(self.keys[:n]), jnp.asarray(self.valid[:n]))
+        return self._dev
+
     def device_keys(self, num_pages: int | None = None) -> jnp.ndarray:
         n = self.num_pages if num_pages is None else num_pages
-        return jnp.asarray(self.keys[:n])
+        return self._device_views(n)[1]
 
     def device_valid(self, num_pages: int | None = None) -> jnp.ndarray:
         n = self.num_pages if num_pages is None else num_pages
-        return jnp.asarray(self.valid[:n])
+        return self._device_views(n)[2]
 
     # -- mutations (host side = buffer manager) ------------------------------
 
@@ -98,6 +107,7 @@ class PagedTable:
         self.keys[p, self.fill] = np.float32(value)
         self.valid[p, self.fill] = True
         self.fill += 1
+        self._dev = None
         return p, new_page
 
     def insert_batch(self, values: np.ndarray) -> tuple[int, int]:
@@ -115,10 +125,27 @@ class PagedTable:
         npages = hit.any(axis=1)
         self.valid[: self.num_pages] &= ~hit
         self.dirty[: self.num_pages] |= npages
+        self._dev = None
         return int(hit.sum())
 
     def clear_dirty(self, page_ids: np.ndarray) -> None:
         self.dirty[page_ids] = False
+
+    def truncate_to(self, num_pages: int, fill: int) -> None:
+        """Drop tuples appended past a (num_pages, fill) snapshot.
+
+        Rollback primitive for atomic batch inserts: appends only ever write
+        forward of the snapshot position, so clearing that region restores
+        the pre-batch table exactly.
+        """
+        self.valid[num_pages:] = False
+        self.keys[num_pages:] = 0.0
+        if num_pages:
+            self.valid[num_pages - 1, fill:] = False
+            self.keys[num_pages - 1, fill:] = 0.0
+        self.num_pages = num_pages
+        self.fill = fill
+        self._dev = None
 
     def _grow(self) -> None:
         add = max(self.capacity_pages // 2, 64)

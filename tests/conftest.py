@@ -1,0 +1,16 @@
+"""Shared pytest configuration: test tiers.
+
+Tier-1 (everything): ``PYTHONPATH=src python -m pytest -x -q``
+Fast inner loop:     ``PYTHONPATH=src python -m pytest -x -q -m "not slow"``
+
+``slow`` marks the model/launch/system modules that compile transformer steps
+or fork subprocess meshes; the core index/kernel/maintenance suite stays in
+the fast tier and finishes in well under a minute.
+"""
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: model/launch/system tests that compile large jit programs or "
+        "spawn subprocess meshes; deselect with -m \"not slow\"")

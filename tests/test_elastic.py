@@ -1,9 +1,13 @@
 """Elastic scaling: a checkpoint written under one mesh restores onto a
 different device count (subprocess meshes of 4 and 8 virtual devices)."""
 import json
+import os
 import subprocess
 import sys
 import textwrap
+import pytest
+
+pytestmark = pytest.mark.slow
 
 _PROG = textwrap.dedent("""
     import os
@@ -13,10 +17,10 @@ _PROG = textwrap.dedent("""
     import jax, jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
     from repro.checkpointing import restore_checkpoint, save_checkpoint
+    from repro.launch.mesh import make_mesh_compat
     from repro.runtime.elastic import reshard_for_mesh, validate_divisibility
 
-    mesh = jax.make_mesh(({d}, {m}), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh_compat(({d}, {m}), ("data", "model"))
     template = {{"w": jnp.zeros((8, 16)), "b": jnp.zeros((16,))}}
     if "{phase}" == "save":
         tree = {{"w": jnp.arange(128, dtype=jnp.float32).reshape(8, 16),
@@ -38,10 +42,13 @@ _PROG = textwrap.dedent("""
 
 def _run(phase, n, d, m, ckpt):
     prog = _PROG.format(phase=phase, n=n, d=d, m=m, ckpt=ckpt)
-    res = subprocess.run([sys.executable, "-c", prog], capture_output=True,
-                         text=True, timeout=300,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"})
+    res = subprocess.run(
+        [sys.executable, "-c", prog], capture_output=True, text=True,
+        timeout=300,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+             # virtual-device mesh => host platform; without this the child
+             # probes for real TPUs (minutes of metadata retries on CI hosts)
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")})
     assert res.returncode == 0, res.stderr[-1500:]
     return json.loads(res.stdout.strip().splitlines()[-1])
 

@@ -1,0 +1,134 @@
+"""Batched query engine: ``search_many`` / ``QueryEngine`` must agree
+bit-for-bit with a Python loop of single-predicate ``index.search`` calls,
+including empty-result and full-table predicates."""
+import numpy as np
+import pytest
+
+from repro.core import index as hix
+from repro.core.hippo import HippoIndex
+from repro.core.predicate import (Predicate, intervals, to_bucket_bitmap,
+                                  to_bucket_bitmaps)
+from repro.runtime.engine import QueryEngine
+from repro.storage.table import PagedTable
+
+
+def make_index(values, page_card=8, resolution=32, density=0.25, **kw):
+    table = PagedTable.from_values(values, page_card=page_card, spare_pages=64)
+    return HippoIndex.create(table, resolution=resolution, density=density, **kw)
+
+
+def workload(rng, n):
+    """Random ranges plus the edge predicates: empty interval, out-of-domain
+    range (matches nothing), full table, point, and open-ended."""
+    preds = []
+    for _ in range(n):
+        lo = float(rng.uniform(0, 1000))
+        preds.append(Predicate.between(lo, lo + float(rng.uniform(0, 300))))
+    preds += [
+        Predicate(lo=5.0, hi=1.0),            # empty interval (lo > hi)
+        Predicate.between(2000, 3000),        # no key in range
+        Predicate.between(-1e30, 1e30),       # full table
+        Predicate(),                          # unconstrained (±inf)
+        Predicate.equality(float(rng.uniform(0, 1000))),
+        Predicate.greater(500.0),
+        Predicate.less(100.0),
+    ]
+    return preds
+
+
+def test_to_bucket_bitmaps_matches_single():
+    rng = np.random.default_rng(0)
+    idx = make_index(rng.uniform(0, 1000, 600))
+    preds = workload(rng, 25)
+    qbms = np.asarray(to_bucket_bitmaps(preds, idx.state.histogram))
+    for q, p in enumerate(preds):
+        single = np.asarray(to_bucket_bitmap(p, idx.state.histogram))
+        np.testing.assert_array_equal(qbms[q], single, err_msg=f"pred {q}")
+
+
+def test_to_bucket_bitmaps_empty_batch():
+    rng = np.random.default_rng(1)
+    idx = make_index(rng.uniform(0, 1000, 100))
+    assert to_bucket_bitmaps([], idx.state.histogram).shape[0] == 0
+
+
+@pytest.mark.parametrize("dist", ["uniform", "skewed", "lowcard"])
+def test_search_many_matches_search_loop(dist):
+    rng = np.random.default_rng({"uniform": 10, "skewed": 11, "lowcard": 12}[dist])
+    n = 3000
+    if dist == "uniform":
+        values = rng.uniform(0, 1000, n)
+    elif dist == "skewed":
+        values = rng.exponential(50, n)
+    else:
+        values = rng.integers(0, 12, n).astype(float)
+    idx = make_index(values)
+    preds = workload(rng, 32)
+    assert len(preds) >= 32
+    qbms = to_bucket_bitmaps(preds, idx.state.histogram)
+    los, his = intervals(preds)
+    res = idx.search_batch(preds)
+    many = hix.search_many(idx.state, qbms, idx.table.device_keys(),
+                           idx.table.device_valid(), los, his)
+    for q, p in enumerate(preds):
+        single = idx.search(p)
+        for batched in (res, many):
+            assert int(batched.counts[q]) == int(single.count), (dist, q)
+            assert int(batched.pages_inspected[q]) == int(single.pages_inspected)
+            assert int(batched.entries_matched[q]) == int(single.entries_matched)
+            np.testing.assert_array_equal(np.asarray(batched.page_mask[q]),
+                                          np.asarray(single.page_mask))
+
+
+def test_search_many_sees_maintenance():
+    """The batched path reads the same state as the scalar path across
+    insert and delete+vacuum maintenance."""
+    rng = np.random.default_rng(7)
+    idx = make_index(rng.uniform(0, 100, 400))
+    for v in rng.uniform(0, 100, 10):
+        idx.insert(float(v))
+    idx.table.delete_where(40, 60)
+    idx.vacuum()
+    preds = [Predicate.between(0, 100), Predicate.between(45, 55),
+             Predicate.between(39, 41)]
+    res = idx.search_batch(preds)
+    for q, p in enumerate(preds):
+        assert int(res.counts[q]) == int(idx.search(p).count)
+
+
+def test_query_engine_recycles_slots_and_matches_loop():
+    rng = np.random.default_rng(3)
+    idx = make_index(rng.uniform(0, 1000, 2000))
+    preds = workload(rng, 32)
+    engine = QueryEngine(idx, batch=8)      # < len(preds): forces recycling
+    counts = engine.run_all(preds)
+    want = np.asarray([int(idx.search(p).count) for p in preds])
+    np.testing.assert_array_equal(counts, want)
+    assert engine.stats.served == len(preds)
+    assert engine.stats.batches == -(-len(preds) // 8)
+    assert all(t is None for t in engine.slots)
+
+
+def test_query_engine_partial_batch_and_tickets():
+    rng = np.random.default_rng(4)
+    idx = make_index(rng.uniform(0, 1000, 500))
+    engine = QueryEngine(idx, batch=16)
+    t1 = engine.submit(Predicate.between(0, 1000))
+    t2 = engine.submit(Predicate(lo=5.0, hi=1.0))
+    assert not t1.done and t1.count is None
+    finished = engine.run_batch()
+    assert {t.qid for t in finished} == {t1.qid, t2.qid}
+    assert t1.done and t1.count == int(idx.search(Predicate.between(0, 1000)).count)
+    assert t2.done and t2.count == 0 and t2.entries_matched == 0
+    assert engine.run_batch() == []         # nothing pending -> no-op
+
+
+def test_query_engine_results_in_submission_order():
+    rng = np.random.default_rng(5)
+    idx = make_index(rng.uniform(0, 1000, 800))
+    engine = QueryEngine(idx, batch=4)
+    preds = workload(rng, 10)
+    tickets = [engine.submit(p) for p in preds]
+    engine.drain()
+    for t, p in zip(tickets, preds):
+        assert t.count == int(idx.search(p).count)

@@ -1,6 +1,10 @@
 """Equi-depth histogram properties (§4.1): balance, monotonicity, bucketize
 agreement with searchsorted semantics."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

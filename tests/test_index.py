@@ -88,6 +88,25 @@ def test_search_compact_matches_dense():
     assert bool(trunc2)
 
 
+def test_search_compact_truncation_flag_parity():
+    """Sweep max_selected across the truncation boundary: whenever the flag
+    is clear the compact count must equal the dense count, and the flag must
+    be set exactly when capacity fell short of the pages selected."""
+    rng = np.random.default_rng(6)
+    values = rng.uniform(0, 100, 1200)
+    idx = make_index(values)
+    pred = Predicate.between(30, 45)
+    dense = idx.search(pred)
+    n_sel = int(dense.pages_inspected)
+    assert n_sel > 1  # the sweep below must cross the boundary
+    for cap in [n_sel - 1, n_sel, idx.table.num_pages]:
+        count, inspected, truncated = idx.search_compact(pred, max_selected=cap)
+        assert int(inspected) == n_sel
+        assert bool(truncated) == (n_sel > cap)
+        if not truncated:
+            assert int(count) == int(dense.count)
+
+
 def test_false_positive_filtering_is_effective():
     # Sorted data => contiguous buckets per entry => small range predicates
     # should prune most pages (the paper's headline search behaviour).

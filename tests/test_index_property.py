@@ -2,6 +2,10 @@
 query result accuracy") must hold for arbitrary data, parameters, predicates,
 and maintenance histories."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
 from hypothesis import given, settings, strategies as st
 
 from repro.core.hippo import HippoIndex

@@ -5,6 +5,8 @@ import pytest
 
 import jax.numpy as jnp
 
+from repro.kernels.batch_filter.ops import batch_filter
+from repro.kernels.batch_filter.ref import batch_filter_ref
 from repro.kernels.bitmap_and.ops import bitmap_and_any
 from repro.kernels.bitmap_and.ref import bitmap_and_any_ref
 from repro.kernels.bucketize.ops import bucketize_values
@@ -34,6 +36,47 @@ def test_bitmap_and_all_zero_query():
     entries = jnp.ones((64, 4), jnp.uint32)
     query = jnp.zeros((4,), jnp.uint32)
     assert int(bitmap_and_any(entries, query).sum()) == 0
+
+
+# ---------------------------------------------------------------------------
+# batch_filter
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("num_queries,num_entries,words", [
+    (1, 1, 1),        # all dims below one tile
+    (7, 127, 13),     # all dims need padding (H=400 -> 13 words)
+    (8, 128, 13),     # exact tile multiples in q and e
+    (9, 129, 13),     # one past the tile boundary
+    (64, 300, 1),     # single-word bitmaps
+    (16, 256, 128),   # multiple tiles on every axis, lane-exact words
+])
+def test_batch_filter_shapes(num_queries, num_entries, words):
+    rng = np.random.default_rng(num_queries * 10000 + num_entries * 10 + words)
+    entries = rng.integers(0, 2**32, (num_entries, words), dtype=np.uint32)
+    queries = (rng.integers(0, 2**32, (num_queries, words), dtype=np.uint32)
+               & rng.integers(0, 2**32, (num_queries, words), dtype=np.uint32))
+    got = batch_filter(jnp.asarray(queries), jnp.asarray(entries))
+    want = batch_filter_ref(jnp.asarray(queries), jnp.asarray(entries))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_batch_filter_rows_match_bitmap_and():
+    """Each row of the batched kernel equals the single-query kernel."""
+    rng = np.random.default_rng(9)
+    entries = jnp.asarray(rng.integers(0, 2**32, (200, 13), dtype=np.uint32))
+    queries = jnp.asarray(rng.integers(0, 2**32, (5, 13), dtype=np.uint32))
+    batched = np.asarray(batch_filter(queries, entries))
+    for q in range(queries.shape[0]):
+        row = np.asarray(bitmap_and_any(entries, queries[q]))
+        np.testing.assert_array_equal(batched[q], row)
+
+
+def test_batch_filter_zero_and_dense_queries():
+    entries = jnp.ones((64, 4), jnp.uint32)
+    queries = jnp.stack([jnp.zeros((4,), jnp.uint32),
+                         jnp.full((4,), 0xFFFFFFFF, jnp.uint32)])
+    out = np.asarray(batch_filter(queries, entries))
+    assert out[0].sum() == 0 and out[1].sum() == 64
 
 
 # ---------------------------------------------------------------------------
@@ -125,3 +168,26 @@ def test_kernelized_filter_matches_index_search():
     qual, counts = page_inspect(table.device_keys(), table.device_valid(),
                                 jnp.asarray(res.page_mask), pred.lo, pred.hi)
     assert int(counts.sum()) == int(res.count)
+
+
+def test_batch_filter_matches_search_many():
+    """The fused kernel's (Q, E) match matrix agrees with the entry-match
+    step of the batched search path (entries_matched per query)."""
+    from repro.core.hippo import HippoIndex
+    from repro.core.predicate import Predicate, to_bucket_bitmaps
+    from repro.storage.table import PagedTable
+
+    rng = np.random.default_rng(12)
+    values = rng.uniform(0, 1000, 4000)
+    table = PagedTable.from_values(values, page_card=50)
+    idx = HippoIndex.create(table, resolution=400, density=0.2)
+    preds = [Predicate.between(float(lo), float(lo) + 40.0)
+             for lo in rng.uniform(0, 1000, 16)]
+    preds.append(Predicate(lo=5.0, hi=1.0))        # all-zero query row
+    qbms = to_bucket_bitmaps(preds, idx.state.histogram)
+    res = idx.search_batch(preds)
+    s = idx.cfg.max_slots
+    live = np.asarray(idx.state.slot_live) & (np.arange(s) < int(idx.state.num_slots))
+    match = np.asarray(batch_filter(qbms, idx.state.bitmaps)).astype(bool) & live[None, :]
+    np.testing.assert_array_equal(match.sum(axis=1),
+                                  np.asarray(res.entries_matched))

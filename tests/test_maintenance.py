@@ -4,6 +4,7 @@ import pytest
 import jax.numpy as jnp
 
 from repro.core import bitmap as bm
+from repro.core import histogram as hg
 from repro.core.hippo import HippoIndex
 from repro.core.predicate import Predicate
 from repro.storage.table import PagedTable
@@ -116,6 +117,67 @@ def test_vacuum_only_resummarizes_dirty_entries():
     bitmaps_after = np.asarray(idx.state.bitmaps)
     changed = (bitmaps_before != bitmaps_after).any(axis=1).sum()
     assert 0 < changed < idx.num_entries  # localized maintenance
+
+
+def test_insert_into_empty_index():
+    """A zero-page build must yield a working zero-entry index that grows
+    through Algorithm 3 on first insert (the histogram comes from the DBMS,
+    not the empty table)."""
+    table = PagedTable.from_values(np.zeros(0), page_card=8, spare_pages=64)
+    hist = hg.build_uniform(0.0, 100.0, 32)
+    idx = HippoIndex.create(table, resolution=32, density=0.25, hist=hist)
+    assert idx.num_entries == 0
+    assert int(idx.state.summarized_until) == -1
+    assert int(idx.search(Predicate.between(0, 100)).count) == 0
+    vals = [5.0, 50.0, 95.0, 12.0, 13.0]
+    for v in vals:
+        idx.insert(v)
+    assert idx.num_entries >= 1
+    assert int(idx.search(Predicate.between(0, 100)).count) == len(vals)
+    assert int(idx.search(Predicate.between(40, 60)).count) == 1
+    # batch insert into a fresh empty index agrees too
+    t2 = PagedTable.from_values(np.zeros(0), page_card=8, spare_pages=64)
+    idx2 = HippoIndex.create(t2, resolution=32, density=0.25, hist=hist)
+    idx2.insert_batch(np.asarray(vals))
+    assert int(idx2.search(Predicate.between(0, 100)).count) == len(vals)
+
+
+def test_insert_at_max_slots_refuses_cleanly():
+    """Relocation/creation at physical capacity must raise before mutating
+    anything — not scatter out of bounds and corrupt the sorted list."""
+    values = np.linspace(0, 99, 64)
+    idx = make_index(values, page_card=8, resolution=32, density=0.25,
+                     max_slots=12, relocate_on_update=True)
+    with pytest.raises(RuntimeError, match="slot capacity"):
+        for v in np.linspace(0, 99, 500):
+            idx.insert(float(v))
+    # refusal left table and index consistent: every query is still exact
+    assert int(idx.state.num_slots) <= idx.cfg.max_slots
+    for lo, hi in [(0, 99), (10, 20), (50, 50.5)]:
+        assert int(idx.search(Predicate.between(lo, hi)).count) == \
+            brute_force(idx.table, lo, hi)
+    # single insert refuses BEFORE touching the table; batch insert rolls the
+    # table back to its pre-batch snapshot (atomic refuse)
+    cardinality = idx.table.cardinality
+    with pytest.raises(RuntimeError, match="slot capacity"):
+        idx.insert(1.0)
+    with pytest.raises(RuntimeError, match="slot capacity"):
+        idx.insert_batch(np.linspace(0, 99, 300))
+    assert idx.table.cardinality == cardinality
+    assert int(idx.search(Predicate.between(0, 99)).count) == \
+        brute_force(idx.table, 0, 99)
+
+
+def test_large_batch_insert_not_refused_at_low_occupancy():
+    """The capacity guard charges slots at actual need, not a worst-case
+    up-front bound: a duplicate-heavy batch far larger than the remaining
+    slot headroom consumes ~no slots and must succeed."""
+    rng = np.random.default_rng(8)
+    idx = make_index(rng.uniform(0, 100, 333), relocate_on_update=True)
+    assert int(idx.state.num_slots) + 1500 > idx.cfg.max_slots  # worst case "full"
+    idx.insert_batch(np.full(1500, 50.0, np.float32))
+    assert int(idx.search(Predicate.between(0, 100)).count) == \
+        brute_force(idx.table, 0, 100) == 333 + 1500
 
 
 def test_counters_track_maintenance():

@@ -9,6 +9,8 @@ import jax.numpy as jnp
 from repro.configs import get_config, list_archs
 from repro.models import transformer
 
+pytestmark = pytest.mark.slow
+
 ARCHS = [
     "llama4-maverick-400b-a17b", "qwen2-moe-a2.7b", "qwen2-vl-7b",
     "musicgen-large", "recurrentgemma-9b", "yi-6b", "stablelm-3b",

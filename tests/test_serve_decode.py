@@ -16,6 +16,8 @@ from dataclasses import replace
 from repro.configs import get_config
 from repro.models import serve, transformer
 
+pytestmark = pytest.mark.slow
+
 ARCHS = [
     "yi-6b",                    # GQA + rope
     "stablelm-3b",              # layernorm + partial rotary + MHA

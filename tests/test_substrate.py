@@ -20,6 +20,7 @@ def _quad_params():
     return {"w": jnp.asarray([3.0, -2.0]), "b": jnp.asarray([1.0])}
 
 
+@pytest.mark.slow  # 300 un-jitted optimizer steps
 def test_adamw_converges_quadratic():
     params = _quad_params()
     state = adamw_init(params)
@@ -182,6 +183,7 @@ def test_watchdog_flags_stragglers():
     assert wd.flagged[0][0] == 6
 
 
+@pytest.mark.slow  # 300 un-jitted optimizer steps
 def test_adamw_int8_moments_converge():
     """8-bit-Adam moments: quantized-state optimizer still converges and the
     state really is int8 (the 400B dry-run cell depends on this path)."""

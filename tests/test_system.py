@@ -4,6 +4,9 @@ decrease and exact restart determinism."""
 import numpy as np
 
 from repro.launch import train as train_driver
+import pytest
+
+pytestmark = pytest.mark.slow
 
 
 def test_train_driver_loss_decreases(tmp_path):
