@@ -76,8 +76,7 @@ def run(card: int = CARD, batches=BATCHES) -> None:
         us_eng = timeit(lambda: engine.run_all(preds), warmup=1, iters=3)
         emit(f"engine_run_all_q{q}", us_eng,
              qps=round(q / (us_eng / 1e6), 1),
-             occupancy=round(engine.stats.slots_filled
-                             / (engine.stats.batches * engine.batch), 3))
+             occupancy=round(engine.stats.occupancy, 3))
 
 
 if __name__ == "__main__":

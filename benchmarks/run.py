@@ -21,6 +21,7 @@ from benchmarks import (
     bench_fig10_tpch,
     bench_kernels,
     bench_maintenance,
+    bench_shard_scaling,
 )
 
 SUITES = {
@@ -42,6 +43,9 @@ SUITES = {
     "engine": lambda quick: bench_engine_throughput.run(
         card=50_000 if quick else bench_engine_throughput.CARD,
         batches=(8, 64) if quick else bench_engine_throughput.BATCHES),
+    "shard_scaling": lambda quick: bench_shard_scaling.run(
+        card=100_000 if quick else bench_shard_scaling.CARD,
+        shards=(1, 2, 4) if quick else bench_shard_scaling.SHARDS),
 }
 
 

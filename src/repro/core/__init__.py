@@ -1,5 +1,6 @@
 """The paper's primary contribution: the Hippo sparse index, in JAX."""
 from repro.core import bitmap, cost, grouping, histogram, predicate  # noqa: F401
 from repro.core.hippo import HippoIndex  # noqa: F401
+from repro.core.partition import ShardedHippoIndex, ShardSpec  # noqa: F401
 from repro.core.index import HippoConfig, HippoState, SearchResult  # noqa: F401
 from repro.core.predicate import Predicate  # noqa: F401

@@ -27,6 +27,24 @@ from repro.core.predicate import (Predicate, intervals, to_bucket_bitmap,
 from repro.storage.table import PagedTable
 
 
+def sample_histogram(table: PagedTable, resolution: int,
+                     sample_size: int = 65536) -> hg.Histogram:
+    """The DBMS-maintained complete histogram, sampled from the table (§4.1).
+
+    Shared by the unsharded and sharded CREATE INDEX paths so the sampling
+    policy (live-tuple mask, fixed seed, cap) has one definition.
+    """
+    if table.num_pages == 0:
+        raise ValueError(
+            "empty table: pass an explicit hist (the complete histogram "
+            "is DBMS-maintained and cannot be sampled from zero tuples)")
+    live = table.keys[: table.num_pages][table.valid[: table.num_pages]]
+    if live.size > sample_size:
+        rng = np.random.default_rng(0)
+        live = rng.choice(live, size=sample_size, replace=False)
+    return hg.build(jnp.asarray(live), resolution)
+
+
 @dataclass
 class MaintenanceCounters:
     inserts: int = 0
@@ -59,16 +77,8 @@ class HippoIndex:
         cfg = hix.HippoConfig(resolution=resolution, density=density,
                               page_card=table.page_card, max_slots=max_slots,
                               relocate_on_update=relocate_on_update)
-        if hist is None and table.num_pages == 0:
-            raise ValueError(
-                "empty table: pass an explicit hist (the complete histogram "
-                "is DBMS-maintained and cannot be sampled from zero tuples)")
         if hist is None:
-            live = table.keys[: table.num_pages][table.valid[: table.num_pages]]
-            if live.size > sample_size:
-                rng = np.random.default_rng(0)
-                live = rng.choice(live, size=sample_size, replace=False)
-            hist = hg.build(jnp.asarray(live), resolution)
+            hist = sample_histogram(table, resolution, sample_size)
         state = hix.build(cfg, hist, table.device_keys(), table.device_valid())
         return HippoIndex(cfg=cfg, state=state, table=table)
 
@@ -118,8 +128,7 @@ class HippoIndex:
 
     def insert(self, value: float) -> None:
         """Eager single-tuple insert: table append + Algorithm 3 update."""
-        opens_page = (self.table.fill == self.table.page_card
-                      or self.table.num_pages == 0)
+        _, opens_page = self.table.next_page_id()
         if opens_page or self.cfg.relocate_on_update:
             # Only the new-entry and relocation paths consume a slot;
             # in-place bit updates never do.

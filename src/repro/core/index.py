@@ -238,6 +238,49 @@ def search_many(state: HippoState, query_bitmaps: jnp.ndarray, keys: jnp.ndarray
     )
 
 
+# Per-shard vmap axes for a stacked ``HippoState``: every array gains a
+# leading shard axis except ``bounds`` — the complete histogram is global
+# (one bucket space for the whole table, so query bitmaps stay shard-agnostic).
+SHARD_AXES = HippoState(
+    bounds=None, bitmaps=0, starts=0, ends=0, sorted_order=0, slot_live=0,
+    num_entries=0, num_slots=0, summarized_until=0)
+
+
+@partial(jax.jit, static_argnames=())
+def search_many_sharded(shards: HippoState, query_bitmaps: jnp.ndarray,
+                        keys: jnp.ndarray, valid: jnp.ndarray,
+                        los: jnp.ndarray, his: jnp.ndarray) -> BatchSearchResult:
+    """``search_many`` over S shards in one device program, count-reduced.
+
+    ``shards`` is a stacked ``HippoState`` (leading shard axis per
+    ``SHARD_AXES``); keys/valid are (S, PPS, page_card) slabs where shard s
+    owns global pages [s*PPS, (s+1)*PPS) and its entry page ids are local to
+    the slab. Each shard runs the full Algorithm 1 pipeline over its slab;
+    counts/match-stats reduce by summation over the shard axis — the
+    ``jax.lax.psum`` of a ``shard_map`` placement, expressed as an array-axis
+    sum so it is identical under vmap on one device and lowers to an
+    AllReduce when the shard axis is sharded over a mesh ``data`` axis
+    (``launch.shardings.sharded_hippo_shardings``).
+
+    Shards partition the page space, so per-shard exact counts sum to exactly
+    the unsharded count: row q's ``counts`` is bit-identical to
+    ``search_many`` on the unsharded index. ``page_mask`` is returned in
+    global page order, (Q, S*PPS).
+    """
+    per = jax.vmap(search_many,
+                   in_axes=(SHARD_AXES, None, 0, 0, None, None))(
+        shards, query_bitmaps, keys, valid, los, his)
+    s, q = per.counts.shape
+    pps = keys.shape[1]
+    page_mask = jnp.moveaxis(per.page_mask, 0, 1).reshape(q, s * pps)
+    return BatchSearchResult(
+        counts=per.counts.sum(axis=0),                 # psum over shards
+        page_mask=page_mask,
+        pages_inspected=per.pages_inspected.sum(axis=0),
+        entries_matched=per.entries_matched.sum(axis=0),
+    )
+
+
 @partial(jax.jit, static_argnames=("max_selected",))
 def search_compact(state: HippoState, query_bitmap: jnp.ndarray, keys: jnp.ndarray,
                    valid: jnp.ndarray, lo, hi, max_selected: int):

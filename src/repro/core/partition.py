@@ -1,0 +1,400 @@
+"""Sharded partition layer — device-parallel Hippo over contiguous page slabs.
+
+The paper scales Hippo by keeping the index tiny while the *table* grows
+(§6's storage model, §7's TPC-H experiments); this layer scales it across
+*devices*. The page space is split into S contiguous slabs ("shards") of
+``pages_per_shard`` pages each, and every shard carries a full, independent
+Hippo structure over its slab:
+
+  shard           a contiguous page extent [s*PPS, (s+1)*PPS) with its own
+                  entry table — the paper's index over one table fragment,
+                  so every per-shard quantity (§6 index size, §6.1 query
+                  cost SF*H, §7 maintenance I/O) applies per shard unchanged
+  routing map     ``ShardSpec``: pure page-id arithmetic mapping any page to
+                  its owning shard (the thin analogue of a partition catalog)
+  summary bitmap  the union of a shard's live partial-histogram bitmaps —
+                  one (W,) packed bitmap per shard. A query whose bucket
+                  bitmap shares no joint bucket with a shard's summary
+                  (§3.2's test, lifted from entries to shards) cannot match
+                  any entry there, so the shard is skipped outright:
+                  partition pruning with the same no-false-negative guarantee
+                  as the entry-level filter
+
+Search runs Algorithm 1 per shard and reduces counts/match-stats across the
+shard axis (``core.index.search_many_sharded``); because shards partition the
+page space and page inspection is exact, per-shard counts sum bit-identically
+to the unsharded count. Maintenance (Algorithm 3 inserts, §5.2 vacuum) routes
+through ``ShardSpec`` and touches exactly one shard's arrays per page — the
+locality that lets shards live on different devices (``launch.shardings``)
+and, next, lets a writer queue update shards asynchronously between query
+batches.
+
+Entry page ids inside each shard are *local* to its slab; global page order
+is recovered by construction since slabs are contiguous and append-ordered.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitmap as bm
+from repro.core import histogram as hg
+from repro.core import index as hix
+from repro.core.hippo import MaintenanceCounters, sample_histogram
+from repro.core.predicate import Predicate, intervals, to_bucket_bitmaps
+from repro.storage.table import PagedTable
+
+
+@dataclass(frozen=True)
+class ShardSpec:
+    """The routing map: shard s owns global pages [s*PPS, (s+1)*PPS)."""
+    num_shards: int
+    pages_per_shard: int
+
+    @property
+    def total_pages(self) -> int:
+        return self.num_shards * self.pages_per_shard
+
+    def owner(self, page_id: int) -> int:
+        """Owning shard of a global page id (may be >= num_shards: overflow)."""
+        return page_id // self.pages_per_shard
+
+    def page_lo(self, s: int) -> int:
+        return s * self.pages_per_shard
+
+    def to_local(self, page_id: int) -> int:
+        return page_id - self.page_lo(self.owner(page_id))
+
+
+class ShardedHippoState(NamedTuple):
+    shards: hix.HippoState     # stacked per hix.SHARD_AXES (bounds shared)
+    summaries: jnp.ndarray     # (S, W) u32 — OR of live entry bitmaps per shard
+
+
+# ---------------------------------------------------------------------------
+# Stacked-state plumbing
+# ---------------------------------------------------------------------------
+
+def shard_state(shards: hix.HippoState, s: int) -> hix.HippoState:
+    """Slice one shard's ``HippoState`` out of the stacked arrays."""
+    return hix.HippoState(*(
+        leaf if ax is None else leaf[s]
+        for leaf, ax in zip(shards, hix.SHARD_AXES)))
+
+
+def set_shard(shards: hix.HippoState, s: int, st: hix.HippoState) -> hix.HippoState:
+    """Write one shard's ``HippoState`` back into the stacked arrays."""
+    return hix.HippoState(*(
+        stacked if ax is None else stacked.at[s].set(new)
+        for stacked, new, ax in zip(shards, st, hix.SHARD_AXES)))
+
+
+def summary_of(st: hix.HippoState) -> jnp.ndarray:
+    """(W,) packed union of a shard's live entry bitmaps (pruning filter).
+
+    After deletes+vacuum the union can only lose bits, so a cached summary is
+    always a superset of the true union — stale summaries may fail to prune a
+    shard but can never skip a matching one.
+    """
+    s = st.bitmaps.shape[0]
+    live = st.slot_live & (jnp.arange(s) < st.num_slots)
+    masked = jnp.where(live[:, None], st.bitmaps, jnp.uint32(0))
+    return jax.lax.reduce(masked, jnp.uint32(0), jax.lax.bitwise_or, (0,))
+
+
+def build_sharded(cfg: hix.HippoConfig, spec: ShardSpec, hist: hg.Histogram,
+                  table: PagedTable) -> ShardedHippoState:
+    """Algorithm 2 per shard: the grouping scan restarts at every slab
+    boundary, so no entry ever spans two shards (maintenance stays local)."""
+    states = []
+    for s in range(spec.num_shards):
+        lo = spec.page_lo(s)
+        hi = min(lo + spec.pages_per_shard, table.num_pages)
+        n = max(hi - lo, 0)
+        keys = jnp.asarray(table.keys[lo:hi]) if n else jnp.zeros(
+            (0, table.page_card), jnp.float32)
+        valid = jnp.asarray(table.valid[lo:hi]) if n else jnp.zeros(
+            (0, table.page_card), bool)
+        states.append(hix.build(cfg, hist, keys, valid))
+    shards = hix.HippoState(*(
+        states[0][i] if ax is None else jnp.stack([st[i] for st in states])
+        for i, ax in enumerate(hix.SHARD_AXES)))
+    summaries = jnp.stack([summary_of(st) for st in states])
+    return ShardedHippoState(shards=shards, summaries=summaries)
+
+
+# ---------------------------------------------------------------------------
+# High-level sharded index (CREATE INDEX ... PARTITION BY page range)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ShardedHippoIndex:
+    """Shard-parallel counterpart of ``core.hippo.HippoIndex``.
+
+    ``cfg.max_slots`` is *per shard*. ``search_batch`` matches
+    ``HippoIndex.search_batch`` in signature and in counts (bit-identical),
+    so ``runtime.engine.QueryEngine`` serves either transparently; its
+    sharded mode additionally uses ``plan_batch``/
+    ``search_batch_shard_arrays`` for summary-pruned per-shard dispatch.
+    """
+    cfg: hix.HippoConfig
+    spec: ShardSpec
+    state: ShardedHippoState
+    table: PagedTable
+    counters: MaintenanceCounters = field(default_factory=MaintenanceCounters)
+
+    # -- creation ------------------------------------------------------------
+
+    @staticmethod
+    def create(table: PagedTable, num_shards: int = 4, resolution: int = 400,
+               density: float = 0.2, pages_per_shard: int | None = None,
+               max_slots: int | None = None, sample_size: int = 65536,
+               relocate_on_update: bool = True,
+               hist: hg.Histogram | None = None) -> "ShardedHippoIndex":
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        if pages_per_shard is None:
+            # slab headroom mirrors HippoIndex.create's slot headroom: 25%
+            # growth room plus a fixed floor so tiny tables can still insert
+            target = int(table.num_pages * 1.25) + 64
+            pages_per_shard = -(-target // num_shards)
+        spec = ShardSpec(num_shards=num_shards, pages_per_shard=pages_per_shard)
+        if spec.total_pages < table.num_pages:
+            raise ValueError(
+                f"shard layout {num_shards}x{pages_per_shard} covers "
+                f"{spec.total_pages} pages < table's {table.num_pages}")
+        if max_slots is None:
+            # per-shard mirror of HippoIndex.create's default: worst case one
+            # entry per slab page, plus the same fixed update budget
+            max_slots = int(pages_per_shard * 1.25) + 1024
+        cfg = hix.HippoConfig(resolution=resolution, density=density,
+                              page_card=table.page_card, max_slots=max_slots,
+                              relocate_on_update=relocate_on_update)
+        if hist is None:
+            hist = sample_histogram(table, resolution, sample_size)
+        state = build_sharded(cfg, spec, hist, table)
+        return ShardedHippoIndex(cfg=cfg, spec=spec, state=state, table=table)
+
+    # -- device views --------------------------------------------------------
+
+    def _slabs(self) -> tuple[jnp.ndarray, jnp.ndarray]:
+        return (self.table.device_keys_sharded(self.spec.num_shards,
+                                               self.spec.pages_per_shard),
+                self.table.device_valid_sharded(self.spec.num_shards,
+                                                self.spec.pages_per_shard))
+
+    # -- query ---------------------------------------------------------------
+
+    def search_batch(self, preds: list[Predicate]) -> hix.BatchSearchResult:
+        """Fused (Q, S) path: one device program over every shard, counts
+        reduced across the shard axis. Bit-identical counts to the unsharded
+        ``HippoIndex.search_batch``."""
+        qbms = to_bucket_bitmaps(preds, self.histogram)
+        los, his = intervals(preds)
+        keys, valid = self._slabs()
+        res = hix.search_many_sharded(self.state.shards, qbms, keys, valid,
+                                      los, his)
+        return res._replace(page_mask=res.page_mask[:, : self.table.num_pages])
+
+    def search_batch_shard(self, s: int, preds: list[Predicate]
+                           ) -> hix.BatchSearchResult:
+        """Algorithm 1 over one shard's slab only (list-of-predicates form).
+
+        Shapes are identical for every shard, so one compiled trace per batch
+        size serves all S shards."""
+        qbms = to_bucket_bitmaps(preds, self.histogram)
+        los, his = intervals(preds)
+        return self.search_batch_shard_arrays(s, qbms, los, his)
+
+    def search_batch_shard_arrays(self, s: int, qbms, los, his
+                                  ) -> hix.BatchSearchResult:
+        """Array form of ``search_batch_shard`` for callers that already
+        converted predicates once (``plan_batch``): qbms (Q, W) uint32,
+        los/his (Q,) float32."""
+        keys, valid = self._slabs()
+        return hix.search_many(shard_state(self.state.shards, s),
+                               jnp.asarray(qbms), keys[s], valid[s],
+                               jnp.asarray(los), jnp.asarray(his))
+
+    def plan_batch(self, preds: list[Predicate]
+                   ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """One predicate conversion for a whole routed batch.
+
+        Returns host arrays (qbms (Q, W), los (Q,), his (Q,), match (Q, S))
+        where ``match[q, s]`` is the joint-bucket test of query q against
+        shard s's summary. False entries are provably count-zero for that
+        (query, shard) pair, so a dispatcher may skip them; rows of ``qbms``
+        slice/pad directly into ``search_batch_shard_arrays`` calls without
+        reconverting the predicates per shard.
+        """
+        qbms = to_bucket_bitmaps(preds, self.histogram)
+        los, his = intervals(preds)
+        match = np.asarray(bm.any_joint(qbms[:, None, :],
+                                        self.state.summaries[None, :, :]))
+        return np.asarray(qbms), np.asarray(los), np.asarray(his), match
+
+    def shard_match_matrix(self, preds: list[Predicate]) -> np.ndarray:
+        """(Q, S) bool pruning matrix (see ``plan_batch``)."""
+        return self.plan_batch(preds)[3]
+
+    def search(self, pred: Predicate) -> hix.BatchSearchResult:
+        """Single-predicate convenience: row 0 of a Q=1 fused batch."""
+        return self.search_batch([pred])
+
+    def count(self, pred: Predicate) -> int:
+        return int(self.search_batch([pred]).counts[0])
+
+    # -- maintenance ---------------------------------------------------------
+
+    def _require_capacity(self, s: int, page_id: int, opens_page: bool) -> None:
+        """Refuse, before any mutation, inserts the shard layout cannot hold:
+        a page past the last slab, or slot exhaustion inside shard s."""
+        if s >= self.spec.num_shards:
+            raise RuntimeError(
+                f"shard layout full: page {page_id} falls past shard "
+                f"{self.spec.num_shards - 1}'s slab "
+                f"(pages_per_shard={self.spec.pages_per_shard}); rebuild with "
+                f"more shards or larger slabs")
+        if opens_page or self.cfg.relocate_on_update:
+            if int(self.state.shards.num_slots[s]) + 1 > self.cfg.max_slots:
+                raise RuntimeError(
+                    f"shard {s} at slot capacity "
+                    f"({int(self.state.shards.num_slots[s])}/"
+                    f"{self.cfg.max_slots}); rebuild with a larger max_slots")
+
+    def _apply_shard(self, s: int, st: hix.HippoState) -> None:
+        self.state = ShardedHippoState(
+            shards=set_shard(self.state.shards, s, st),
+            summaries=self.state.summaries.at[s].set(summary_of(st)))
+
+    def insert(self, value: float) -> None:
+        """Eager insert routed to the owning shard (Algorithm 3, shard-local)."""
+        page_id, opens_page = self.table.next_page_id()
+        s = self.spec.owner(page_id)
+        self._require_capacity(s, page_id, opens_page)
+        self.table.insert(value)
+        st = shard_state(self.state.shards, s)
+        before = int(st.num_entries)
+        st = hix.insert_tuple(self.cfg, st, jnp.float32(value),
+                              jnp.int32(self.spec.to_local(page_id)))
+        self._apply_shard(s, st)
+        self.counters.inserts += 1
+        self.counters.entries_touched += 1
+        self.counters.entries_created += int(st.num_entries) - before
+
+    def insert_batch(self, values: np.ndarray) -> None:
+        """Atomic vectorized insert: tuples landing on already-summarized
+        pages take one fused scatter per touched shard (same batch shape for
+        every shard => one compiled trace); page-opening tuples replay the
+        eager path. On refusal the table and every shard roll back."""
+        values = np.asarray(values, np.float32).ravel()
+        if values.size == 0:
+            return
+        snap_state = self.state
+        snap_pages, snap_fill = self.table.num_pages, self.table.fill
+        try:
+            self._insert_batch_apply(values)
+        except RuntimeError:
+            self.state = snap_state
+            self.table.truncate_to(snap_pages, snap_fill)
+            raise
+        self.counters.inserts += len(values)
+
+    def _insert_batch_apply(self, values: np.ndarray) -> None:
+        pages = []
+        for v in values:
+            pid, _ = self.table.insert(float(v))
+            if self.spec.owner(pid) >= self.spec.num_shards:
+                raise RuntimeError(
+                    f"shard layout full: page {pid} falls past shard "
+                    f"{self.spec.num_shards - 1}'s slab; rebuild with more "
+                    f"shards or larger slabs")
+            pages.append(pid)
+        pages = np.asarray(pages, np.int32)
+        owners = pages // self.spec.pages_per_shard
+        old_mask = pages <= self.summarized_until
+        vals_dev = jnp.asarray(values)
+        for s in np.unique(owners[old_mask]):
+            local = jnp.asarray(np.clip(pages - self.spec.page_lo(int(s)), 0,
+                                        self.spec.pages_per_shard - 1))
+            mask = jnp.asarray(old_mask & (owners == s))
+            st = hix.insert_batch_existing(
+                self.cfg, shard_state(self.state.shards, int(s)), vals_dev,
+                local, mask)
+            self._apply_shard(int(s), st)
+        for v, p in zip(values[~old_mask], pages[~old_mask]):
+            s = self.spec.owner(int(p))
+            opens = int(p) > self.summarized_until
+            if opens or self.cfg.relocate_on_update:
+                self._require_capacity(s, int(p), opens)
+            st = hix.insert_tuple(self.cfg, shard_state(self.state.shards, s),
+                                  jnp.float32(v),
+                                  jnp.int32(self.spec.to_local(int(p))))
+            self._apply_shard(s, st)
+
+    def vacuum(self) -> int:
+        """§5.2 lazy maintenance, shard-grouped: dirty pages re-summarize
+        entries inside their owning shards only (dirty spans touch each shard
+        independently). Returns total entries re-summarized."""
+        dirty_pages = np.flatnonzero(self.table.dirty[: self.table.num_pages])
+        if dirty_pages.size == 0:
+            return 0
+        keys, valid = self._slabs()
+        total = 0
+        for s in np.unique(dirty_pages // self.spec.pages_per_shard):
+            st = shard_state(self.state.shards, int(s))
+            affected = np.zeros((self.cfg.max_slots,), bool)
+            lo = self.spec.page_lo(int(s))
+            for p in dirty_pages[dirty_pages // self.spec.pages_per_shard == s]:
+                slot, _ = hix.locate_slot(st, jnp.int32(int(p) - lo))
+                affected[int(slot)] = True
+            st = hix.resummarize_slots(self.cfg, st, keys[int(s)],
+                                       valid[int(s)], jnp.asarray(affected))
+            self._apply_shard(int(s), st)
+            total += int(affected.sum())
+        self.table.clear_dirty(dirty_pages)
+        self.counters.vacuums += 1
+        self.counters.entries_resummarized += total
+        return total
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def histogram(self) -> hg.Histogram:
+        return hg.Histogram(self.state.shards.bounds)
+
+    @property
+    def num_shards(self) -> int:
+        return self.spec.num_shards
+
+    @property
+    def num_entries(self) -> int:
+        return int(np.asarray(self.state.shards.num_entries).sum())
+
+    @property
+    def summarized_until(self) -> int:
+        """Last globally-summarized page id (-1 if the index is empty)."""
+        su = np.asarray(self.state.shards.summarized_until)
+        glob = np.where(su >= 0,
+                        su + np.arange(self.spec.num_shards) *
+                        self.spec.pages_per_shard, -1)
+        return int(glob.max())
+
+    def shard_entry_counts(self) -> np.ndarray:
+        return np.asarray(self.state.shards.num_entries)
+
+    def nbytes(self, compressed: bool = False) -> int:
+        """Live index bytes summed over shards, plus the routing map and the
+        per-shard summary bitmaps (the layer's only additions)."""
+        total = 0
+        for s in range(self.spec.num_shards):
+            total += hix.index_nbytes(self.cfg, shard_state(self.state.shards, s),
+                                      compressed=compressed)
+        total += self.spec.num_shards * 8        # routing map: page range per shard
+        total += int(np.asarray(self.state.summaries).nbytes)
+        return total

@@ -1,1 +1,2 @@
-from repro.kernels.batch_filter.ops import batch_filter  # noqa: F401
+from repro.kernels.batch_filter.ops import (batch_filter,  # noqa: F401
+                                            batch_filter_sharded)

@@ -47,3 +47,38 @@ def batch_filter_kernel(queries: jnp.ndarray, entries: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((q, e), jnp.int32),
         interpret=interpret,
     )(queries, entries)
+
+
+def _kernel_sharded(queries_ref, entries_ref, out_ref):
+    q = queries_ref[...]                        # (BLOCK_Q, W) uint32
+    e = entries_ref[0]                          # (BLOCK_E, W) uint32
+    joint = (q[:, None, :] & e[None, :, :]) != 0  # (BLOCK_Q, BLOCK_E, W)
+    out_ref[0] = jnp.any(joint, axis=-1).astype(jnp.int32)
+
+
+def batch_filter_sharded_kernel(queries: jnp.ndarray, entries: jnp.ndarray,
+                                *, interpret: bool = False) -> jnp.ndarray:
+    """Shard-axis extension of ``batch_filter_kernel``: the grid gains a
+    leading shard dimension so one fused launch covers every (query, shard,
+    entry) tile — the match phase of ``core.index.search_many_sharded``.
+
+    queries: (Q, W) uint32 (Q % BLOCK_Q == 0), shared across shards;
+    entries: (S, E, W) uint32 (E % BLOCK_E == 0, W % 128 == 0), one entry
+    table per shard. Returns (S, Q, E) int32 0/1. The query tile is reused
+    across the shard axis, so S shards re-stream only their own entry tiles;
+    VMEM per grid step is the unsharded budget plus one (1, BLOCK_E, W) slab.
+    """
+    q, w = queries.shape
+    s, e, _ = entries.shape
+    grid = (s, q // BLOCK_Q, e // BLOCK_E)
+    return pl.pallas_call(
+        _kernel_sharded,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_Q, w), lambda k, i, j: (i, 0)),
+            pl.BlockSpec((1, BLOCK_E, w), lambda k, i, j: (k, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BLOCK_Q, BLOCK_E), lambda k, i, j: (k, i, j)),
+        out_shape=jax.ShapeDtypeStruct((s, q, e), jnp.int32),
+        interpret=interpret,
+    )(queries, entries)

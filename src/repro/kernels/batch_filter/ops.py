@@ -7,8 +7,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.batch_filter.kernel import (BLOCK_E, BLOCK_Q,
-                                               batch_filter_kernel)
-from repro.kernels.batch_filter.ref import batch_filter_ref
+                                               batch_filter_kernel,
+                                               batch_filter_sharded_kernel)
+from repro.kernels.batch_filter.ref import (batch_filter_ref,
+                                            batch_filter_sharded_ref)
 
 
 def _pad_to(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
@@ -41,4 +43,26 @@ def batch_filter(queries: jnp.ndarray, entries: jnp.ndarray,
     return out[:q, :e]
 
 
-__all__ = ["batch_filter", "batch_filter_ref"]
+@partial(jax.jit, static_argnames=("interpret",))
+def batch_filter_sharded(queries: jnp.ndarray, entries: jnp.ndarray,
+                         interpret: bool | None = None) -> jnp.ndarray:
+    """Joint-bucket test of every query against every shard's entry table.
+
+    queries: (Q, W) uint32, entries: (S, E, W) uint32 -> (S, Q, E) int32 0/1
+    — the fused match phase over the whole shard axis. On CPU backends runs
+    the Pallas kernel in interpret mode.
+    """
+    q, w = queries.shape
+    s, e, _ = entries.shape
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    qp = _pad_to(queries, 0, BLOCK_Q)
+    qp = _pad_to(qp, 1, 128)
+    ep = _pad_to(entries, 1, BLOCK_E)
+    ep = _pad_to(ep, 2, 128)
+    out = batch_filter_sharded_kernel(qp, ep, interpret=interpret)
+    return out[:, :q, :e]
+
+
+__all__ = ["batch_filter", "batch_filter_ref",
+           "batch_filter_sharded", "batch_filter_sharded_ref"]

@@ -6,3 +6,10 @@ def batch_filter_ref(queries: jnp.ndarray, entries: jnp.ndarray) -> jnp.ndarray:
     """queries: (Q, W) uint32; entries: (E, W) uint32 -> (Q, E) int32 0/1."""
     return jnp.any((queries[:, None, :] & entries[None, :, :]) != 0,
                    axis=-1).astype(jnp.int32)
+
+
+def batch_filter_sharded_ref(queries: jnp.ndarray,
+                             entries: jnp.ndarray) -> jnp.ndarray:
+    """queries: (Q, W) uint32; entries: (S, E, W) uint32 -> (S, Q, E) i32 0/1."""
+    return jnp.any((queries[None, :, None, :] & entries[:, None, :, :]) != 0,
+                   axis=-1).astype(jnp.int32)

@@ -42,6 +42,21 @@ def make_host_mesh(data: int = 1, model: int = 1):
     return make_mesh_compat((data, model), ("data", "model"))
 
 
+def make_shard_mesh(num_shards: int):
+    """1-D ``data`` mesh for Hippo shard placement (``core.partition``).
+
+    Uses the largest divisor of ``num_shards`` that fits the local device
+    count, so the shard axis of a ``ShardedHippoState`` always divides the
+    mesh (each device serves a contiguous block of shards; one device =
+    everything replicated, which is the CPU test case).
+    """
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    n = jax.device_count()
+    d = max(k for k in range(1, min(num_shards, n) + 1) if num_shards % k == 0)
+    return make_mesh_compat((d,), ("data",))
+
+
 def batch_axes(mesh) -> tuple:
     """Mesh axes a batch dimension shards over (pod+data when present)."""
     names = mesh.axis_names

@@ -176,3 +176,47 @@ def tree_cache_shardings(cfg, mesh, cache_shape, batch: int):
 
 def replicated(mesh):
     return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Hippo shard placement (core.partition): shard axis over ``data``
+# ---------------------------------------------------------------------------
+
+def sharded_hippo_shardings(mesh, state):
+    """NamedShardings for a ``core.partition.ShardedHippoState``.
+
+    Every stacked leaf's leading shard axis goes over the mesh ``data`` axis
+    (divisibility-fitted, degrading to replication like every other rule
+    here); the shared histogram ``bounds`` replicates. Under this placement
+    the shard-axis sums in ``core.index.search_many_sharded`` lower to the
+    cross-device AllReduce — the ``jax.lax.psum`` of the count-reduce engine.
+    """
+    from repro.core import index as hix
+    from repro.core.partition import ShardedHippoState
+
+    def one(leaf, lead_sharded):
+        spec = P("data") if lead_sharded else P()
+        return NamedSharding(mesh, _fit(mesh, spec, leaf.shape))
+
+    shards = hix.HippoState(*(
+        one(leaf, ax == 0)
+        for leaf, ax in zip(state.shards, hix.SHARD_AXES)))
+    return ShardedHippoState(shards=shards,
+                             summaries=one(state.summaries, True))
+
+
+def shard_slab_shardings(mesh, slab):
+    """Sharding for (S, PPS, page_card) table slabs: shard axis over ``data``."""
+    return NamedSharding(mesh, _fit(mesh, P("data"), slab.shape))
+
+
+def place_sharded(mesh, state, keys, valid):
+    """device_put a ``ShardedHippoState`` + its table slabs onto the mesh.
+
+    Returns (state, keys, valid) with every shard-axis array placed over the
+    ``data`` axis; pass them straight to ``search_many_sharded``.
+    """
+    st = jax.device_put(state, sharded_hippo_shardings(mesh, state))
+    k = jax.device_put(keys, shard_slab_shardings(mesh, keys))
+    v = jax.device_put(valid, shard_slab_shardings(mesh, valid))
+    return st, k, v

@@ -14,7 +14,18 @@ bounds — so the trace is compiled once and recycled for the life of the engine
 
 Free slots in a partially-filled batch are padded with the empty predicate
 (lo > hi), which converts to an all-zero query bitmap and matches nothing —
-the query analogue of a recycled decode slot idling on a pad token.
+the query analogue of a recycled decode slot idling on a pad token. Pads are
+tracked separately (``EngineStats.pad_slots``) and never counted as served
+work; ``EngineStats.occupancy`` is real queries over dispatched slots.
+
+Sharded mode (``core.partition.ShardedHippoIndex``): the admitted batch is
+routed through the per-shard summary bitmaps — a (batch, S) joint-bucket
+test — and each shard receives one dispatch carrying only the queries whose
+summaries match it, padded to a small bucket width so every shard reuses the
+same compiled traces. Shards no admitted query can match are skipped
+entirely (partition pruning), and per-query counts are reduced across the
+dispatched shards on the way out. Per-shard occupancy lands in
+``EngineStats.shard_queries`` / ``shard_slots``.
 """
 from __future__ import annotations
 
@@ -25,6 +36,8 @@ import numpy as np
 from repro.core.predicate import Predicate
 
 _EMPTY = Predicate(lo=1.0, hi=0.0)   # lo > hi: matches nothing
+
+_SHARD_BUCKET_MIN = 8   # smallest per-shard dispatch width (trace bucketing)
 
 
 @dataclass
@@ -43,17 +56,49 @@ class EngineStats:
     submitted: int = 0
     served: int = 0
     batches: int = 0
-    slots_filled: int = 0    # occupancy numerator; batches * batch is the denominator
+    slots_filled: int = 0    # real query-slots dispatched (never _EMPTY pads)
+    pad_slots: int = 0       # _EMPTY pads dispatched alongside them
+    shard_dispatches: int = 0          # per-shard programs run (sharded mode)
+    shards_pruned: int = 0             # shard dispatches skipped via summaries
+    shard_queries: dict = field(default_factory=dict)  # shard -> real queries
+    shard_slots: dict = field(default_factory=dict)    # shard -> slots incl. pads
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of *dispatched* slots that carried a real query.
+
+        Dense mode dispatches the full batch width, so pads are the free
+        batch slots; sharded mode dispatches per-shard bucketed widths, so
+        pads are the bucket roundings (a query dispatched to several shards
+        fills one slot in each)."""
+        total = self.slots_filled + self.pad_slots
+        return self.slots_filled / total if total else 0.0
+
+    def shard_occupancy(self) -> dict[int, float]:
+        """Per-shard occupancy of the sharded dispatch path."""
+        return {s: self.shard_queries[s] / self.shard_slots[s]
+                for s in sorted(self.shard_slots) if self.shard_slots[s]}
 
 
 class QueryEngine:
-    """Lock-step batched query executor with slot recycling."""
+    """Lock-step batched query executor with slot recycling.
 
-    def __init__(self, index, batch: int = 64):
+    ``sharded`` selects the per-shard dispatch path; by default it turns on
+    whenever the index exposes the partition-layer routing surface
+    (``plan_batch`` / ``search_batch_shard_arrays``).
+    """
+
+    def __init__(self, index, batch: int = 64, sharded: bool | None = None):
         if batch < 1:
             raise ValueError(f"batch must be >= 1, got {batch}")
         self.index = index
         self.batch = batch
+        if sharded is None:
+            sharded = hasattr(index, "plan_batch")
+        if sharded and not hasattr(index, "plan_batch"):
+            raise ValueError("sharded=True needs a ShardedHippoIndex-style "
+                             "index (plan_batch/search_batch_shard_arrays)")
+        self.sharded = sharded
         self.slots: list[QueryTicket | None] = [None] * batch
         self.queue: list[QueryTicket] = []
         self.stats = EngineStats()
@@ -77,7 +122,8 @@ class QueryEngine:
     # -- execution ------------------------------------------------------------
 
     def run_batch(self) -> list[QueryTicket]:
-        """Admit queued queries into free slots and execute one device program.
+        """Admit queued queries into free slots and execute one device program
+        (or, in sharded mode, one summary-routed dispatch per matched shard).
 
         Returns the tickets retired by this batch (empty if nothing pending).
         """
@@ -85,24 +131,81 @@ class QueryEngine:
         active = [i for i, t in enumerate(self.slots) if t is not None]
         if not active:
             return []
-        preds = [t.pred if t is not None else _EMPTY for t in self.slots]
-        res = self.index.search_batch(preds)
-        counts = np.asarray(res.counts)
-        inspected = np.asarray(res.pages_inspected)
-        matched = np.asarray(res.entries_matched)
+        if self.sharded:
+            counts, inspected, matched = self._execute_sharded(active)
+        else:
+            counts, inspected, matched = self._execute_dense(active)
         finished = []
-        for i in active:
+        for k, i in enumerate(active):
             t = self.slots[i]
-            t.count = int(counts[i])
-            t.pages_inspected = int(inspected[i])
-            t.entries_matched = int(matched[i])
+            t.count = int(counts[k])
+            t.pages_inspected = int(inspected[k])
+            t.entries_matched = int(matched[k])
             t.done = True
             finished.append(t)
             self.slots[i] = None          # recycle the slot
         self.stats.batches += 1
-        self.stats.slots_filled += len(active)
+        if not self.sharded:
+            # dense mode dispatches the full batch width; sharded dispatch
+            # accounting happens per shard inside _execute_sharded
+            self.stats.slots_filled += len(active)
+            self.stats.pad_slots += self.batch - len(active)
         self.stats.served += len(finished)
         return finished
+
+    def _execute_dense(self, active: list[int]) -> tuple:
+        """One full-width device program; pads fill the free slots."""
+        preds = [t.pred if t is not None else _EMPTY for t in self.slots]
+        res = self.index.search_batch(preds)
+        counts = np.asarray(res.counts)[active]
+        inspected = np.asarray(res.pages_inspected)[active]
+        matched = np.asarray(res.entries_matched)[active]
+        return counts, inspected, matched
+
+    def _execute_sharded(self, active: list[int]) -> tuple:
+        """Per-shard dispatch with summary pruning and count-reduce.
+
+        Each shard runs a program over only the active queries whose bucket
+        bitmaps share a joint bucket with its summary — padded up to a bucket
+        width so all shards share compiled traces — and per-query results sum
+        across shards (shards partition the page space, so the reduction is
+        exact; a pruned (query, shard) pair is provably count-zero). The
+        predicates are converted to bucket bitmaps once per batch
+        (``plan_batch``); per-shard dispatches slice and pad the converted
+        rows, with zero bitmaps + (lo=1, hi=0) intervals as the pads.
+        """
+        preds = [self.slots[i].pred for i in active]
+        qbms, los, his, match = self.index.plan_batch(preds)
+        a = len(active)
+        counts = np.zeros((a,), np.int64)
+        inspected = np.zeros((a,), np.int64)
+        matched = np.zeros((a,), np.int64)
+        for s in range(self.index.num_shards):
+            hit = np.flatnonzero(match[:, s])
+            if hit.size == 0:
+                self.stats.shards_pruned += 1
+                continue
+            width = _SHARD_BUCKET_MIN
+            while width < hit.size:
+                width *= 2
+            qb = np.zeros((width, qbms.shape[1]), qbms.dtype)
+            qb[: hit.size] = qbms[hit]
+            lo = np.full((width,), _EMPTY.lo, np.float32)
+            hi = np.full((width,), _EMPTY.hi, np.float32)
+            lo[: hit.size] = los[hit]
+            hi[: hit.size] = his[hit]
+            res = self.index.search_batch_shard_arrays(s, qb, lo, hi)
+            counts[hit] += np.asarray(res.counts)[: hit.size]
+            inspected[hit] += np.asarray(res.pages_inspected)[: hit.size]
+            matched[hit] += np.asarray(res.entries_matched)[: hit.size]
+            self.stats.shard_dispatches += 1
+            self.stats.slots_filled += int(hit.size)
+            self.stats.pad_slots += width - int(hit.size)
+            self.stats.shard_queries[s] = (
+                self.stats.shard_queries.get(s, 0) + int(hit.size))
+            self.stats.shard_slots[s] = (
+                self.stats.shard_slots.get(s, 0) + width)
+        return counts, inspected, matched
 
     def drain(self) -> list[QueryTicket]:
         """Run batches until the queue and all slots are empty."""

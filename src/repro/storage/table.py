@@ -9,6 +9,13 @@ numpy — the buffer-manager role — while queries operate on jnp device views.
 Deletions mark a validity bit and a per-page ``dirty`` flag, which is exactly
 the "note in the page header" PostgreSQL leaves for VACUUM (§5.2 / §7.1);
 ``HippoIndex.vacuum`` consumes the dirty flags.
+
+Sharded views: ``device_keys_sharded``/``device_valid_sharded`` reshape the
+page space into S contiguous slabs of ``pages_per_shard`` pages each — the
+storage-layout half of the partition layer (``core.partition``). Each shard
+owns the page range [s*PPS, (s+1)*PPS); slab pages past ``num_pages`` are
+zero-key/invalid padding, so per-shard programs are shape-stable while the
+table grows into its slabs.
 """
 from __future__ import annotations
 
@@ -30,6 +37,7 @@ class PagedTable:
     fill: int = 0                               # tuples in the last page
     payload: dict = field(default_factory=dict)  # name -> (capacity, page_card) array
     _dev: tuple | None = field(default=None, repr=False, compare=False)  # device-view cache
+    _dev_shard: tuple | None = field(default=None, repr=False, compare=False)  # slab-view cache
 
     def __post_init__(self):
         if self.keys is None:
@@ -89,7 +97,46 @@ class PagedTable:
         n = self.num_pages if num_pages is None else num_pages
         return self._device_views(n)[2]
 
+    # -- sharded device views (core.partition slab layout) -------------------
+
+    def _shard_views(self, num_shards: int, pages_per_shard: int) -> tuple:
+        """(keys, valid) slabs of shape (S, PPS, page_card), cached like
+        ``_device_views``. Slab pages beyond ``num_pages`` are invalid padding;
+        per-shard entries never cover them, so they cost inspection FLOPs only
+        inside their shard's fixed-shape program."""
+        key = (num_shards, pages_per_shard, self.num_pages)
+        if self._dev_shard is None or self._dev_shard[0] != key:
+            total = num_shards * pages_per_shard
+            if total < self.num_pages:
+                raise ValueError(
+                    f"slab layout {num_shards}x{pages_per_shard} covers {total} "
+                    f"pages < table's {self.num_pages}")
+            keys = np.zeros((total, self.page_card), np.float32)
+            valid = np.zeros((total, self.page_card), bool)
+            keys[: self.num_pages] = self.keys[: self.num_pages]
+            valid[: self.num_pages] = self.valid[: self.num_pages]
+            shape = (num_shards, pages_per_shard, self.page_card)
+            self._dev_shard = (key, jnp.asarray(keys.reshape(shape)),
+                               jnp.asarray(valid.reshape(shape)))
+        return self._dev_shard
+
+    def device_keys_sharded(self, num_shards: int, pages_per_shard: int) -> jnp.ndarray:
+        return self._shard_views(num_shards, pages_per_shard)[1]
+
+    def device_valid_sharded(self, num_shards: int, pages_per_shard: int) -> jnp.ndarray:
+        return self._shard_views(num_shards, pages_per_shard)[2]
+
     # -- mutations (host side = buffer manager) ------------------------------
+
+    def next_page_id(self) -> tuple[int, bool]:
+        """(page the next append lands on, whether it opens a new page).
+
+        The single statement of the append policy — index layers that must
+        route or capacity-check *before* mutating (``HippoIndex.insert``,
+        shard routing in ``core.partition``) predict through this instead of
+        re-deriving the fill rule."""
+        new_page = self.fill == self.page_card or self.num_pages == 0
+        return (self.num_pages if new_page else self.num_pages - 1), new_page
 
     def insert(self, value: float) -> tuple[int, bool]:
         """Append one tuple; returns (page_id, is_new_page).
@@ -97,7 +144,7 @@ class PagedTable:
         Appends to the last partially-filled page, else opens a new page —
         matching heap-file append behaviour assumed by Algorithm 3.
         """
-        new_page = self.fill == self.page_card or self.num_pages == 0
+        _, new_page = self.next_page_id()
         if new_page:
             if self.num_pages == self.capacity_pages:
                 self._grow()
@@ -108,6 +155,7 @@ class PagedTable:
         self.valid[p, self.fill] = True
         self.fill += 1
         self._dev = None
+        self._dev_shard = None
         return p, new_page
 
     def insert_batch(self, values: np.ndarray) -> tuple[int, int]:
@@ -126,6 +174,7 @@ class PagedTable:
         self.valid[: self.num_pages] &= ~hit
         self.dirty[: self.num_pages] |= npages
         self._dev = None
+        self._dev_shard = None
         return int(hit.sum())
 
     def clear_dirty(self, page_ids: np.ndarray) -> None:
@@ -146,6 +195,7 @@ class PagedTable:
         self.num_pages = num_pages
         self.fill = fill
         self._dev = None
+        self._dev_shard = None
 
     def _grow(self) -> None:
         add = max(self.capacity_pages // 2, 64)

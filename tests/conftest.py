@@ -1,11 +1,13 @@
 """Shared pytest configuration: test tiers.
 
 Tier-1 (everything): ``PYTHONPATH=src python -m pytest -x -q``
-Fast inner loop:     ``PYTHONPATH=src python -m pytest -x -q -m "not slow"``
+Fast inner loop:     ``PYTHONPATH=src python -m pytest -x -q -m "not slow and not shard"``
+Partition suite:     ``PYTHONPATH=src python -m pytest -x -q -m shard``
 
 ``slow`` marks the model/launch/system modules that compile transformer steps
-or fork subprocess meshes; the core index/kernel/maintenance suite stays in
-the fast tier and finishes in well under a minute.
+or fork subprocess meshes; ``shard`` marks the partition-layer suite (many
+distinct stacked-state jit shapes, so it compiles for ~40s). Excluding both
+keeps the core index/kernel/maintenance inner loop well under a minute.
 """
 
 
@@ -14,3 +16,8 @@ def pytest_configure(config):
         "markers",
         "slow: model/launch/system tests that compile large jit programs or "
         "spawn subprocess meshes; deselect with -m \"not slow\"")
+    config.addinivalue_line(
+        "markers",
+        "shard: partition-layer tests (core.partition / sharded engine); "
+        "excluded from the fast inner loop (-m \"not slow and not shard\") "
+        "to keep it under a minute — run just these with -m shard")

@@ -5,8 +5,9 @@ import pytest
 
 import jax.numpy as jnp
 
-from repro.kernels.batch_filter.ops import batch_filter
-from repro.kernels.batch_filter.ref import batch_filter_ref
+from repro.kernels.batch_filter.ops import batch_filter, batch_filter_sharded
+from repro.kernels.batch_filter.ref import (batch_filter_ref,
+                                            batch_filter_sharded_ref)
 from repro.kernels.bitmap_and.ops import bitmap_and_any
 from repro.kernels.bitmap_and.ref import bitmap_and_any_ref
 from repro.kernels.bucketize.ops import bucketize_values
@@ -77,6 +78,39 @@ def test_batch_filter_zero_and_dense_queries():
                          jnp.full((4,), 0xFFFFFFFF, jnp.uint32)])
     out = np.asarray(batch_filter(queries, entries))
     assert out[0].sum() == 0 and out[1].sum() == 64
+
+
+@pytest.mark.shard
+@pytest.mark.parametrize("num_shards,num_queries,num_entries,words", [
+    (1, 1, 1, 1),       # all dims below one tile
+    (3, 7, 127, 13),    # every axis needs padding
+    (4, 8, 128, 13),    # exact tile multiples in q and e
+    (2, 9, 129, 13),    # one past the tile boundary
+    (5, 16, 64, 128),   # lane-exact words, several shards
+])
+def test_batch_filter_sharded_shapes(num_shards, num_queries, num_entries, words):
+    rng = np.random.default_rng(
+        num_shards * 100000 + num_queries * 1000 + num_entries * 10 + words)
+    entries = rng.integers(0, 2**32, (num_shards, num_entries, words),
+                           dtype=np.uint32)
+    queries = (rng.integers(0, 2**32, (num_queries, words), dtype=np.uint32)
+               & rng.integers(0, 2**32, (num_queries, words), dtype=np.uint32))
+    got = batch_filter_sharded(jnp.asarray(queries), jnp.asarray(entries))
+    want = batch_filter_sharded_ref(jnp.asarray(queries), jnp.asarray(entries))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.shard
+def test_batch_filter_sharded_slices_match_unsharded():
+    """Each shard's (Q, E) slice equals the unsharded kernel on that shard's
+    entry table — the kernel analogue of the count-reduce parity."""
+    rng = np.random.default_rng(13)
+    entries = jnp.asarray(rng.integers(0, 2**32, (3, 100, 13), dtype=np.uint32))
+    queries = jnp.asarray(rng.integers(0, 2**32, (5, 13), dtype=np.uint32))
+    out = np.asarray(batch_filter_sharded(queries, entries))
+    for s in range(3):
+        np.testing.assert_array_equal(out[s],
+                                      np.asarray(batch_filter(queries, entries[s])))
 
 
 # ---------------------------------------------------------------------------

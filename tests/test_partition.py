@@ -1,0 +1,360 @@
+"""Partition layer: sharded search must be count-identical to the unsharded
+index under arbitrary predicates and maintenance histories, shard-boundary
+maintenance must stay local and refuse cleanly at capacity, and the engine's
+summary-routed dispatch must agree with everything else."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import index as hix
+from repro.core.hippo import HippoIndex
+from repro.core.partition import (ShardedHippoIndex, ShardSpec, shard_state,
+                                  summary_of)
+from repro.core.predicate import Predicate, intervals, to_bucket_bitmaps
+from repro.runtime.engine import QueryEngine
+from repro.storage.table import PagedTable
+
+pytestmark = pytest.mark.shard
+
+
+def make_pair(values, num_shards=4, page_card=8, resolution=32, density=0.25,
+              spare_pages=64, **kw):
+    """(unsharded, sharded) indexes over identical tables."""
+    t1 = PagedTable.from_values(np.asarray(values).copy(), page_card=page_card,
+                                spare_pages=spare_pages)
+    t2 = PagedTable.from_values(np.asarray(values).copy(), page_card=page_card,
+                                spare_pages=spare_pages)
+    idx = HippoIndex.create(t1, resolution=resolution, density=density, **kw)
+    sidx = ShardedHippoIndex.create(t2, num_shards=num_shards,
+                                    resolution=resolution, density=density, **kw)
+    return idx, sidx
+
+
+def brute_force(table, lo, hi):
+    live = table.valid[: table.num_pages]
+    keys = table.keys[: table.num_pages]
+    return int((live & (keys >= lo) & (keys <= hi)).sum())
+
+
+def workload(rng, n):
+    """Random ranges plus the edge predicates (mirrors test_engine)."""
+    preds = []
+    for _ in range(n):
+        lo = float(rng.uniform(0, 1000))
+        preds.append(Predicate.between(lo, lo + float(rng.uniform(0, 300))))
+    preds += [
+        Predicate(lo=5.0, hi=1.0),            # empty interval (lo > hi)
+        Predicate.between(2000, 3000),        # no key in range
+        Predicate.between(-1e30, 1e30),       # full table
+        Predicate(),                          # unconstrained
+        Predicate.equality(float(rng.uniform(0, 1000))),
+        Predicate.greater(500.0),
+        Predicate.less(100.0),
+    ]
+    return preds
+
+
+# ---------------------------------------------------------------------------
+# Search parity (the acceptance invariant)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("num_shards", [1, 3, 4])
+def test_sharded_counts_match_unsharded(num_shards):
+    rng = np.random.default_rng(num_shards)
+    idx, sidx = make_pair(rng.uniform(0, 1000, 2000), num_shards=num_shards)
+    preds = workload(rng, 16)
+    want = np.asarray(idx.search_batch(preds).counts)
+    got = np.asarray(sidx.search_batch(preds).counts)
+    np.testing.assert_array_equal(got, want)
+    # per-shard dispatch sums to the same counts, and pruned (q, s) pairs
+    # are exactly count-zero (the routing soundness guarantee)
+    match = sidx.shard_match_matrix(preds)
+    per = np.stack([np.asarray(sidx.search_batch_shard(s, preds).counts)
+                    for s in range(num_shards)])
+    np.testing.assert_array_equal(per.sum(axis=0), want)
+    for s in range(num_shards):
+        assert per[s][~match[:, s]].sum() == 0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("dist", ["uniform", "sorted", "skewed", "lowcard"])
+def test_sharded_parity_predicate_sweep(dist):
+    """Property-style sweep: many random predicates over several data
+    distributions, counts bit-identical at every shard count."""
+    rng = np.random.default_rng({"uniform": 0, "sorted": 1, "skewed": 2,
+                                 "lowcard": 3}[dist])
+    n = 3000
+    if dist == "uniform":
+        values = rng.uniform(0, 1000, n)
+    elif dist == "sorted":
+        values = np.sort(rng.uniform(0, 1000, n))
+    elif dist == "skewed":
+        values = rng.exponential(50, n)
+    else:
+        values = rng.integers(0, 12, n).astype(float)
+    preds = workload(rng, 48)
+    t0 = PagedTable.from_values(values.copy(), page_card=8, spare_pages=64)
+    want = np.asarray(HippoIndex.create(t0, resolution=32,
+                                        density=0.25).search_batch(preds).counts)
+    truth = [brute_force(t0, *p.selectivity_interval()) for p in preds]
+    np.testing.assert_array_equal(want, truth)
+    for s in (2, 5):
+        t = PagedTable.from_values(values.copy(), page_card=8, spare_pages=64)
+        sidx = ShardedHippoIndex.create(t, num_shards=s, resolution=32,
+                                        density=0.25)
+        got = np.asarray(sidx.search_batch(preds).counts)
+        np.testing.assert_array_equal(got, want, err_msg=f"{dist} S={s}")
+
+
+def test_search_many_sharded_page_mask_global_order():
+    """The fused (Q, S) path returns page_mask in global page order and
+    covers every truly-qualified page (soundness)."""
+    rng = np.random.default_rng(7)
+    values = rng.uniform(0, 1000, 1500)
+    _, sidx = make_pair(values, num_shards=3)
+    pred = Predicate.between(200, 420)
+    res = sidx.search_batch([pred])
+    t = sidx.table
+    qual_pages = (t.valid[: t.num_pages]
+                  & (t.keys[: t.num_pages] >= 200)
+                  & (t.keys[: t.num_pages] <= 420)).any(axis=1)
+    mask = np.asarray(res.page_mask[0])
+    assert mask.shape == (t.num_pages,)
+    assert not (qual_pages & ~mask).any()
+
+
+def test_empty_and_single_shard_layouts():
+    rng = np.random.default_rng(11)
+    values = rng.uniform(0, 100, 200)
+    idx, sidx = make_pair(values, num_shards=1)
+    for lo, hi in [(0, 100), (30, 35)]:
+        assert sidx.count(Predicate.between(lo, hi)) == \
+            int(idx.search(Predicate.between(lo, hi)).count)
+    # layouts with more shards than pages: trailing shards stay empty
+    t = PagedTable.from_values(rng.uniform(0, 100, 20), page_card=8)
+    s = ShardedHippoIndex.create(t, num_shards=8, resolution=32, density=0.25)
+    assert s.count(Predicate.between(0, 100)) == t.cardinality
+    assert (s.shard_entry_counts()[s.spec.owner(t.num_pages - 1) + 1:] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Shard-boundary maintenance
+# ---------------------------------------------------------------------------
+
+def test_insert_routes_to_owning_shard_and_matches_unsharded():
+    rng = np.random.default_rng(21)
+    idx, sidx = make_pair(rng.uniform(0, 100, 333), num_shards=3)
+    for v in rng.uniform(0, 100, 80):
+        idx.insert(float(v))
+        sidx.insert(float(v))
+    for lo, hi in [(0, 100), (10, 20), (50, 50.5)]:
+        want = brute_force(sidx.table, lo, hi)
+        assert sidx.count(Predicate.between(lo, hi)) == want
+        assert int(idx.search(Predicate.between(lo, hi)).count) == want
+
+
+def test_insert_crossing_shard_boundary_stays_local():
+    """Appends that open the first page of a fresh shard must create entries
+    in that shard only — earlier shards' arrays stay untouched."""
+    values = np.linspace(0, 99, 64)           # 8 pages of 8
+    t = PagedTable.from_values(values, page_card=8, spare_pages=64)
+    sidx = ShardedHippoIndex.create(t, num_shards=2, pages_per_shard=10,
+                                    resolution=32, density=0.25)
+    before = np.asarray(shard_state(sidx.state.shards, 0).bitmaps).copy()
+    # fill shard 0's slab (pages 8, 9), then cross into shard 1 (page 10+)
+    for v in np.linspace(0, 99, 40):
+        sidx.insert(float(v))
+    assert sidx.table.num_pages > 10          # crossed the boundary
+    assert int(sidx.state.shards.num_entries[1]) > 0
+    after_s0 = np.asarray(shard_state(sidx.state.shards, 0).bitmaps)
+    changed_rows = (before != after_s0).any(axis=1).sum()
+    # shard 0 changed only while its own slab filled; shard-1 pages never
+    # touched it — and search stays exact throughout
+    assert changed_rows <= int(sidx.state.shards.num_slots[0])
+    assert sidx.count(Predicate.between(0, 100)) == brute_force(t, 0, 100)
+
+
+def test_insert_into_full_shard_layout_refuses_cleanly():
+    rng = np.random.default_rng(23)
+    t = PagedTable.from_values(rng.uniform(0, 100, 64), page_card=8,
+                               spare_pages=64)
+    sidx = ShardedHippoIndex.create(t, num_shards=2, pages_per_shard=5,
+                                    resolution=32, density=0.25)
+    with pytest.raises(RuntimeError, match="shard layout full"):
+        for v in np.linspace(0, 90, 100):
+            sidx.insert(float(v))
+    card = t.cardinality
+    # the refusing insert left the table untouched and queries exact
+    assert sidx.count(Predicate.between(0, 100)) == card
+    with pytest.raises(RuntimeError, match="shard layout full"):
+        sidx.insert(1.0)
+    assert t.cardinality == card
+    # batch insert is atomic: rolls the table back to the pre-batch snapshot
+    with pytest.raises(RuntimeError, match="shard layout full"):
+        sidx.insert_batch(np.linspace(0, 90, 50))
+    assert t.cardinality == card
+    assert sidx.count(Predicate.between(0, 100)) == card
+
+
+def test_insert_at_shard_slot_capacity_refuses_cleanly():
+    values = np.linspace(0, 99, 64)
+    t = PagedTable.from_values(values, page_card=8, spare_pages=256)
+    sidx = ShardedHippoIndex.create(t, num_shards=2, max_slots=12,
+                                    resolution=32, density=0.25,
+                                    relocate_on_update=True)
+    with pytest.raises(RuntimeError, match="slot capacity"):
+        for v in np.linspace(0, 99, 500):
+            sidx.insert(float(v))
+    assert (np.asarray(sidx.state.shards.num_slots) <= sidx.cfg.max_slots).all()
+    assert sidx.count(Predicate.between(0, 99)) == brute_force(t, 0, 99)
+
+
+def test_batch_insert_matches_sequential_across_shards():
+    rng = np.random.default_rng(25)
+    base = rng.uniform(0, 100, 200)
+    extra = rng.uniform(0, 100, 150)
+    _, sidx_a = make_pair(base, num_shards=3, relocate_on_update=False,
+                          spare_pages=256)
+    _, sidx_b = make_pair(base, num_shards=3, relocate_on_update=False,
+                          spare_pages=256)
+    for v in extra:
+        sidx_a.insert(float(v))
+    sidx_b.insert_batch(extra)
+    for lo, hi in [(0, 100), (25, 30), (77, 77.5)]:
+        want = brute_force(sidx_b.table, lo, hi)
+        assert sidx_a.count(Predicate.between(lo, hi)) == want
+        assert sidx_b.count(Predicate.between(lo, hi)) == want
+
+
+def test_vacuum_spanning_two_shards():
+    """A delete band dirtying pages in two different shards re-summarizes
+    entries in both, queries stay exact before and after, and untouched
+    shards' bitmaps are left alone."""
+    values = np.sort(np.random.default_rng(27).uniform(0, 100, 800))
+    _, sidx = make_pair(values, num_shards=4)
+    pps = sidx.spec.pages_per_shard
+    # sorted keys => a mid-domain band hits pages around the shard-1/2 border
+    lo_key = float(values[(2 * pps - 2) * 8])
+    hi_key = float(values[(2 * pps + 2) * 8])
+    sidx.table.delete_where(lo_key, hi_key)
+    dirty = np.flatnonzero(sidx.table.dirty[: sidx.table.num_pages])
+    touched = np.unique(dirty // pps)
+    assert len(touched) >= 2                  # the band spans a shard boundary
+    # exact while deletes are lazy (§5.2)
+    assert sidx.count(Predicate.between(0, 100)) == brute_force(sidx.table, 0, 100)
+    summaries_before = np.asarray(sidx.state.summaries).copy()
+    n = sidx.vacuum()
+    assert n > 0
+    assert not sidx.table.dirty[: sidx.table.num_pages].any()
+    assert sidx.count(Predicate.between(lo_key, hi_key)) == 0
+    assert sidx.count(Predicate.between(0, 100)) == brute_force(sidx.table, 0, 100)
+    # vacuum stayed local: summaries of untouched shards are unchanged
+    after = np.asarray(sidx.state.summaries)
+    for s in range(sidx.num_shards):
+        if s not in touched:
+            np.testing.assert_array_equal(after[s], summaries_before[s])
+
+
+def test_summaries_track_maintenance_as_superset():
+    """Shard summaries must stay supersets of their live entry unions (the
+    pruning soundness invariant) across inserts and vacuum."""
+    rng = np.random.default_rng(29)
+    _, sidx = make_pair(rng.uniform(0, 100, 400), num_shards=3)
+    for v in rng.uniform(0, 100, 50):
+        sidx.insert(float(v))
+    sidx.table.delete_where(20, 40)
+    sidx.vacuum()
+    for s in range(sidx.num_shards):
+        st = shard_state(sidx.state.shards, s)
+        true_union = np.asarray(summary_of(st))
+        cached = np.asarray(sidx.state.summaries[s])
+        assert (cached | true_union == cached).all()
+
+
+# ---------------------------------------------------------------------------
+# Engine sharded mode
+# ---------------------------------------------------------------------------
+
+def test_engine_sharded_mode_matches_dense_engine():
+    rng = np.random.default_rng(31)
+    idx, sidx = make_pair(np.sort(rng.uniform(0, 1000, 2000)), num_shards=4)
+    preds = workload(rng, 24)
+    dense = QueryEngine(idx, batch=8).run_all(preds)
+    routed = QueryEngine(sidx, batch=8)
+    assert routed.sharded
+    np.testing.assert_array_equal(routed.run_all(preds), dense)
+    # fused (Q, S) mode on the same sharded index agrees too
+    fused = QueryEngine(sidx, batch=8, sharded=False)
+    assert not fused.sharded
+    np.testing.assert_array_equal(fused.run_all(preds), dense)
+    assert routed.stats.shard_dispatches > 0
+    occ = routed.stats.shard_occupancy()
+    assert occ and all(0 < v <= 1 for v in occ.values())
+
+
+def test_engine_stats_never_count_pads_as_served_work():
+    rng = np.random.default_rng(33)
+    idx, sidx = make_pair(rng.uniform(0, 1000, 500), num_shards=2)
+    # dense mode: pads are the free batch slots
+    engine = QueryEngine(idx, batch=16)
+    engine.submit(Predicate.between(0, 1000))
+    engine.submit(Predicate(lo=5.0, hi=1.0))       # real (empty) query
+    assert len(engine.run_batch()) == 2
+    st = engine.stats
+    assert st.slots_filled == 2                    # pads excluded
+    assert st.pad_slots == 14
+    assert st.served == 2
+    assert st.occupancy == pytest.approx(2 / 16)
+    # sharded mode: pads are the per-shard bucket roundings actually
+    # dispatched, never the undispatched batch remainder
+    routed = QueryEngine(sidx, batch=16)
+    routed.submit(Predicate.between(0, 1000))
+    routed.submit(Predicate(lo=5.0, hi=1.0))
+    assert len(routed.run_batch()) == 2
+    st = routed.stats
+    assert st.served == 2
+    assert st.slots_filled == sum(st.shard_queries.values())
+    assert st.slots_filled + st.pad_slots == sum(st.shard_slots.values())
+    assert 0 < st.occupancy <= 1
+    # a fresh engine with nothing dispatched reports zero occupancy
+    assert QueryEngine(idx, batch=4).stats.occupancy == 0.0
+
+
+def test_engine_sharded_requires_partition_surface():
+    rng = np.random.default_rng(35)
+    idx, _ = make_pair(rng.uniform(0, 1000, 100), num_shards=2)
+    with pytest.raises(ValueError, match="sharded"):
+        QueryEngine(idx, sharded=True)
+
+
+# ---------------------------------------------------------------------------
+# Device placement (data-axis shardings)
+# ---------------------------------------------------------------------------
+
+def test_placed_sharded_state_search_parity():
+    from repro.launch.mesh import make_shard_mesh
+    from repro.launch.shardings import place_sharded
+
+    rng = np.random.default_rng(41)
+    _, sidx = make_pair(rng.uniform(0, 1000, 1000), num_shards=4)
+    mesh = make_shard_mesh(sidx.num_shards)
+    assert sidx.num_shards % mesh.shape["data"] == 0
+    keys, valid = sidx._slabs()
+    st, k, v = place_sharded(mesh, sidx.state, keys, valid)
+    preds = workload(rng, 8)
+    qbms = to_bucket_bitmaps(preds, sidx.histogram)
+    los, his = intervals(preds)
+    res = hix.search_many_sharded(st.shards, qbms, k, v, los, his)
+    want = np.asarray(sidx.search_batch(preds).counts)
+    np.testing.assert_array_equal(np.asarray(res.counts), want)
+
+
+def test_shard_spec_routing_arithmetic():
+    spec = ShardSpec(num_shards=3, pages_per_shard=10)
+    assert spec.total_pages == 30
+    assert spec.owner(0) == 0 and spec.owner(9) == 0
+    assert spec.owner(10) == 1 and spec.owner(29) == 2
+    assert spec.owner(30) == 3                 # overflow: past the last slab
+    assert spec.to_local(23) == 3
+    assert spec.page_lo(2) == 20
