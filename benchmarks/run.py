@@ -1,9 +1,10 @@
-"""Benchmark harness: one module per paper table/figure.
+"""Benchmark harness: one module per paper table/figure or subsystem claim.
 
 Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
-Scale with --quick for CI-speed runs.
+Scale with --quick for CI-speed runs; ``--list`` prints every registered
+benchmark with the one-line description from its module docstring.
 
-  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig7]
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig7] [--list]
 """
 from __future__ import annotations
 
@@ -12,6 +13,7 @@ import sys
 import time
 
 from benchmarks import (
+    bench_async_maintenance,
     bench_cost_model,
     bench_engine_throughput,
     bench_fig6_overhead,
@@ -24,36 +26,64 @@ from benchmarks import (
     bench_shard_scaling,
 )
 
-SUITES = {
-    "fig6": lambda quick: bench_fig6_overhead.run(
-        scales=(20_000, 100_000) if quick else bench_fig6_overhead.SCALES),
-    "fig7": lambda quick: bench_fig7_selectivity.run(
-        card=50_000 if quick else bench_fig7_selectivity.CARD),
-    "fig8": lambda quick: bench_fig8_density.run(
-        card=50_000 if quick else bench_fig8_density.CARD),
-    "fig9": lambda quick: bench_fig9_resolution.run(
-        card=50_000 if quick else bench_fig9_resolution.CARD),
-    "fig10": lambda quick: bench_fig10_tpch.run(
-        card=50_000 if quick else bench_fig10_tpch.CARD),
-    "cost_model": lambda quick: bench_cost_model.run(
-        card=50_000 if quick else bench_cost_model.CARD),
-    "maintenance": lambda quick: bench_maintenance.run(
-        card=50_000 if quick else bench_maintenance.CARD),
-    "kernels": lambda quick: bench_kernels.run(),
-    "engine": lambda quick: bench_engine_throughput.run(
-        card=50_000 if quick else bench_engine_throughput.CARD,
-        batches=(8, 64) if quick else bench_engine_throughput.BATCHES),
-    "shard_scaling": lambda quick: bench_shard_scaling.run(
-        card=100_000 if quick else bench_shard_scaling.CARD,
-        shards=(1, 2, 4) if quick else bench_shard_scaling.SHARDS),
+# One registry: suite name -> (module, quick-aware runner). The module half
+# feeds --list (its docstring) and tests/test_docs.py's coverage check.
+REGISTRY = {
+    "fig6": (bench_fig6_overhead, lambda quick: bench_fig6_overhead.run(
+        scales=(20_000, 100_000) if quick else bench_fig6_overhead.SCALES)),
+    "fig7": (bench_fig7_selectivity, lambda quick: bench_fig7_selectivity.run(
+        card=50_000 if quick else bench_fig7_selectivity.CARD)),
+    "fig8": (bench_fig8_density, lambda quick: bench_fig8_density.run(
+        card=50_000 if quick else bench_fig8_density.CARD)),
+    "fig9": (bench_fig9_resolution, lambda quick: bench_fig9_resolution.run(
+        card=50_000 if quick else bench_fig9_resolution.CARD)),
+    "fig10": (bench_fig10_tpch, lambda quick: bench_fig10_tpch.run(
+        card=50_000 if quick else bench_fig10_tpch.CARD)),
+    "cost_model": (bench_cost_model, lambda quick: bench_cost_model.run(
+        card=50_000 if quick else bench_cost_model.CARD)),
+    "maintenance": (bench_maintenance, lambda quick: bench_maintenance.run(
+        card=50_000 if quick else bench_maintenance.CARD)),
+    "kernels": (bench_kernels, lambda quick: bench_kernels.run()),
+    "engine": (bench_engine_throughput,
+               lambda quick: bench_engine_throughput.run(
+                   card=50_000 if quick else bench_engine_throughput.CARD,
+                   batches=(8, 64) if quick else bench_engine_throughput.BATCHES)),
+    "shard_scaling": (bench_shard_scaling,
+                      lambda quick: bench_shard_scaling.run(
+                          card=100_000 if quick else bench_shard_scaling.CARD,
+                          shards=(1, 2, 4) if quick else bench_shard_scaling.SHARDS)),
+    "async_maintenance": (bench_async_maintenance,
+                          lambda quick: bench_async_maintenance.run(
+                              card=50_000 if quick else bench_async_maintenance.CARD,
+                              rounds=3 if quick else bench_async_maintenance.ROUNDS)),
 }
+
+MODULES = {name: mod for name, (mod, _) in REGISTRY.items()}
+SUITES = {name: fn for name, (_, fn) in REGISTRY.items()}
+
+
+def describe(name: str) -> str:
+    """First line of the bench module's docstring (enforced non-empty by
+    tests/test_docs.py and the --list path)."""
+    doc = MODULES[name].__doc__ or ""
+    first = doc.strip().splitlines()[0].strip() if doc.strip() else ""
+    return first or f"<{name}: missing module docstring>"
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None, choices=sorted(SUITES))
+    ap.add_argument("--list", action="store_true",
+                    help="print each registered benchmark and its one-line "
+                         "description, then exit")
     args = ap.parse_args(argv)
+
+    if args.list:
+        width = max(len(n) for n in SUITES)
+        for name in SUITES:
+            print(f"{name:<{width}}  {describe(name)}")
+        return
 
     print("name,us_per_call,derived")
     t0 = time.time()

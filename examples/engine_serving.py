@@ -6,9 +6,11 @@ Simulates the multi-user serving scenario the engine exists for: a queue of
 mixed-selectivity range queries is admitted into a fixed-slot batch and
 executed one device program per batch (core.index.search_many), then the
 same stream is replayed through the per-query loop to show the throughput
-gap, and finally through a sharded index (core.partition) where the engine
-routes each batch through per-shard summary bitmaps. Counts are asserted
-identical between all paths.
+gap, then through a sharded index (core.partition) where the engine routes
+each batch through per-shard summary bitmaps, and finally with writes mixed
+in: the async maintenance writer (runtime.writer) stages inserts/deletes in
+per-shard queues and drains them between batches, with staged rows overlaid
+into every count. Counts are asserted identical between all paths.
 """
 import time
 
@@ -76,6 +78,45 @@ def main():
           f"({len(preds)/dt_shard:.0f} q/s) — {ss.shard_dispatches} shard "
           f"dispatches, {ss.shards_pruned} pruned; occupancy {occ}")
     assert (shard_counts == loop_counts).all(), "sharded engine must be exact"
+
+    # Mixed read/write serving: writes go through the engine's async
+    # maintenance writer instead of running Algorithm 3 on the query path.
+    # engine.write() stages the row in its shard's pending queue (a host
+    # list append); the default drain policy applies one shard queue as a
+    # fused batch between query batches, and explicit flush() drains the
+    # rest. Staged rows are overlaid into every count, so results are exact
+    # at all times — asserted against a synchronous twin below.
+    t3 = PagedTable.from_values(values, page_card=page_card, spare_pages=2048)
+    widx = ShardedHippoIndex.create(t3, num_shards=4, resolution=400, density=0.2)
+    wengine = QueryEngine(widx, batch=64)          # drain_policy="between_batches"
+    t4 = PagedTable.from_values(values, page_card=page_card, spare_pages=2048)
+    twin = ShardedHippoIndex.create(t4, num_shards=4, resolution=400, density=0.2)
+
+    new_rows = rng.uniform(0, 1e6, 64)
+    for v in new_rows:
+        wengine.write(float(v))                    # staged, off the query path
+        twin.insert(float(v))                      # synchronous twin
+    ws = wengine.stats
+    print(f"writer:  staged {ws.queue_depth} rows across "
+          f"{len(wengine.writer.pending_shards())} shard queue(s) "
+          f"(peak depth {ws.peak_queue_depth})")
+    async_counts = wengine.run_all(preds)          # drains ride along batches
+    twin_counts = np.asarray([twin.count(p) for p in preds])
+    assert (async_counts == twin_counts).all(), \
+        "staged counts must match the synchronous twin"
+    wengine.delete(250_000, 260_000)               # validity mask now, vacuum queued
+    t4.delete_where(250_000, 260_000)
+    twin.vacuum()
+    drained = wengine.flush()                      # apply everything pending now
+    ws = wengine.stats
+    print(f"writer:  drained {ws.drained_rows} rows in {ws.drains} units "
+          f"({ws.drain_us/1e3:.1f} ms total); flush applied {drained} rows, "
+          f"queue depth {ws.queue_depth}")
+    after = wengine.run_all(preds)
+    twin_after = np.asarray([twin.count(p) for p in preds])
+    assert (after == twin_after).all(), "post-flush counts must match the twin"
+    print("writer:  counts identical to the synchronous twin before and after "
+          "the flush")
 
 
 if __name__ == "__main__":

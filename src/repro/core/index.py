@@ -281,6 +281,43 @@ def search_many_sharded(shards: HippoState, query_bitmaps: jnp.ndarray,
     )
 
 
+@partial(jax.jit, static_argnames=())
+def staged_overlay_counts(staged_vals: jnp.ndarray, staged_live: jnp.ndarray,
+                          los: jnp.ndarray, his: jnp.ndarray) -> jnp.ndarray:
+    """Exact counts of staged-but-undrained rows per query.
+
+    staged_vals: (S, B) f32 pending insert values per shard, padded to a
+    bucketed width B; staged_live: (S, B) bool (False for pads and for staged
+    rows killed by a later delete); los/his: (Q,) f32 predicate intervals.
+    Returns (Q,) i32. Staged rows live in no page yet, so this is a plain
+    interval test — the device half of the writer's staging-buffer overlay
+    (``runtime.writer.MaintenanceWriter``).
+    """
+    v = staged_vals[None]                                       # (1, S, B)
+    hit = (staged_live[None] & (v >= los[:, None, None])
+           & (v <= his[:, None, None]))
+    return hit.sum(axis=(1, 2), dtype=jnp.int32)
+
+
+def search_many_sharded_staged(shards: HippoState, query_bitmaps: jnp.ndarray,
+                               keys: jnp.ndarray, valid: jnp.ndarray,
+                               los: jnp.ndarray, his: jnp.ndarray,
+                               staged_vals: jnp.ndarray,
+                               staged_live: jnp.ndarray) -> BatchSearchResult:
+    """``search_many_sharded`` plus the staging-buffer overlay.
+
+    ``counts`` gains the staged rows matching each predicate, so results
+    never go stale while inserts wait in the writer's per-shard queues:
+    row q equals what ``search_many_sharded`` would return *after* every
+    staged row drained. ``page_mask``/``pages_inspected``/``entries_matched``
+    are the index-only values — staged rows occupy no page until their drain.
+    """
+    res = search_many_sharded(shards, query_bitmaps, keys, valid, los, his)
+    return res._replace(
+        counts=res.counts + staged_overlay_counts(staged_vals, staged_live,
+                                                  los, his))
+
+
 @partial(jax.jit, static_argnames=("max_selected",))
 def search_compact(state: HippoState, query_bitmap: jnp.ndarray, keys: jnp.ndarray,
                    valid: jnp.ndarray, lo, hi, max_selected: int):

@@ -26,8 +26,11 @@ page space and page inspection is exact, per-shard counts sum bit-identically
 to the unsharded count. Maintenance (Algorithm 3 inserts, §5.2 vacuum) routes
 through ``ShardSpec`` and touches exactly one shard's arrays per page — the
 locality that lets shards live on different devices (``launch.shardings``)
-and, next, lets a writer queue update shards asynchronously between query
-batches.
+and lets the async writer (``runtime.writer.MaintenanceWriter``) rebuild and
+swap shard s's slice between query batches while every other shard keeps
+serving. The writer attaches as ``staging`` (its pending rows overlay into
+``search_batch`` counts) and raises ``swap_in_flight`` while a slice is
+mid-swap, which every query/maintenance surface checks.
 
 Entry page ids inside each shard are *local* to its slab; global page order
 is recovered by construction since slabs are contiguous and append-ordered.
@@ -87,13 +90,19 @@ def shard_state(shards: hix.HippoState, s: int) -> hix.HippoState:
         for leaf, ax in zip(shards, hix.SHARD_AXES)))
 
 
-def set_shard(shards: hix.HippoState, s: int, st: hix.HippoState) -> hix.HippoState:
-    """Write one shard's ``HippoState`` back into the stacked arrays."""
+@jax.jit
+def set_shard(shards: hix.HippoState, s, st: hix.HippoState) -> hix.HippoState:
+    """Write one shard's ``HippoState`` back into the stacked arrays.
+
+    Jitted with ``s`` traced, so every shard (and every writer swap) reuses
+    one compiled scatter program instead of nine eager dispatches.
+    """
     return hix.HippoState(*(
         stacked if ax is None else stacked.at[s].set(new)
         for stacked, new, ax in zip(shards, st, hix.SHARD_AXES)))
 
 
+@jax.jit
 def summary_of(st: hix.HippoState) -> jnp.ndarray:
     """(W,) packed union of a shard's live entry bitmaps (pruning filter).
 
@@ -147,6 +156,16 @@ class ShardedHippoIndex:
     state: ShardedHippoState
     table: PagedTable
     counters: MaintenanceCounters = field(default_factory=MaintenanceCounters)
+    # Attached ``runtime.writer.MaintenanceWriter`` (None when maintenance is
+    # synchronous). When present, ``search_batch`` folds its staging-buffer
+    # overlay into counts so queries never go stale while inserts wait in the
+    # per-shard queues.
+    staging: object | None = field(default=None, repr=False, compare=False)
+    # Shard id currently being rebuilt by a writer drain (None otherwise).
+    # Queries and maintenance refuse while set: mid-swap the stacked state
+    # and the table disagree about that shard, and serving from it would
+    # return silently wrong counts.
+    swap_in_flight: int | None = field(default=None, repr=False, compare=False)
 
     # -- creation ------------------------------------------------------------
 
@@ -188,17 +207,53 @@ class ShardedHippoIndex:
                 self.table.device_valid_sharded(self.spec.num_shards,
                                                 self.spec.pages_per_shard))
 
+    # -- mid-swap refusal ----------------------------------------------------
+
+    def _check_swap_guard(self) -> None:
+        """Refuse queries/maintenance while a writer drain is swapping a shard.
+
+        Between a drain's table appends and its state swap, shard
+        ``swap_in_flight``'s slice of ``ShardedHippoState`` describes a table
+        that no longer exists; any result computed from it would be silently
+        wrong. Single-threaded callers only hit this via re-entrancy (e.g. a
+        query issued from inside a drain hook), but the refusal must be loud
+        either way.
+        """
+        if self.swap_in_flight is not None:
+            raise RuntimeError(
+                f"shard {self.swap_in_flight} swap in flight: queries and "
+                f"maintenance are refused until the writer drain completes "
+                f"(state and table disagree about that shard mid-swap)")
+
+    def _check_no_staged(self) -> None:
+        """Refuse direct inserts while a writer holds staged rows: staged
+        page routing was predicted from the table tail, and a direct append
+        would shift it under the queues."""
+        if self.staging is not None and self.staging.queue_depth:
+            raise RuntimeError(
+                f"writer has {self.staging.queue_depth} staged rows pending: "
+                f"route writes through the writer (or flush() it first) — a "
+                f"direct insert would shift the table tail and break the "
+                f"staged rows' page routing")
+
     # -- query ---------------------------------------------------------------
 
     def search_batch(self, preds: list[Predicate]) -> hix.BatchSearchResult:
         """Fused (Q, S) path: one device program over every shard, counts
         reduced across the shard axis. Bit-identical counts to the unsharded
-        ``HippoIndex.search_batch``."""
+        ``HippoIndex.search_batch``; with a writer attached, counts also
+        include its staged-but-undrained rows (never-stale contract)."""
+        self._check_swap_guard()
         qbms = to_bucket_bitmaps(preds, self.histogram)
         los, his = intervals(preds)
         keys, valid = self._slabs()
-        res = hix.search_many_sharded(self.state.shards, qbms, keys, valid,
-                                      los, his)
+        if self.staging is not None and self.staging.staged_rows:
+            vals, live = self.staging.device_buffers()
+            res = hix.search_many_sharded_staged(self.state.shards, qbms, keys,
+                                                 valid, los, his, vals, live)
+        else:
+            res = hix.search_many_sharded(self.state.shards, qbms, keys, valid,
+                                          los, his)
         return res._replace(page_mask=res.page_mask[:, : self.table.num_pages])
 
     def search_batch_shard(self, s: int, preds: list[Predicate]
@@ -215,7 +270,10 @@ class ShardedHippoIndex:
                                   ) -> hix.BatchSearchResult:
         """Array form of ``search_batch_shard`` for callers that already
         converted predicates once (``plan_batch``): qbms (Q, W) uint32,
-        los/his (Q,) float32."""
+        los/his (Q,) float32. Counts are index-only — the engine's routed
+        dispatch adds the writer's staging overlay itself (staged rows belong
+        to no entry yet, so summary pruning cannot route them)."""
+        self._check_swap_guard()
         keys, valid = self._slabs()
         return hix.search_many(shard_state(self.state.shards, s),
                                jnp.asarray(qbms), keys[s], valid[s],
@@ -232,6 +290,7 @@ class ShardedHippoIndex:
         slice/pad directly into ``search_batch_shard_arrays`` calls without
         reconverting the predicates per shard.
         """
+        self._check_swap_guard()
         qbms = to_bucket_bitmaps(preds, self.histogram)
         los, his = intervals(preds)
         match = np.asarray(bm.any_joint(qbms[:, None, :],
@@ -274,6 +333,8 @@ class ShardedHippoIndex:
 
     def insert(self, value: float) -> None:
         """Eager insert routed to the owning shard (Algorithm 3, shard-local)."""
+        self._check_swap_guard()
+        self._check_no_staged()
         page_id, opens_page = self.table.next_page_id()
         s = self.spec.owner(page_id)
         self._require_capacity(s, page_id, opens_page)
@@ -292,6 +353,8 @@ class ShardedHippoIndex:
         pages take one fused scatter per touched shard (same batch shape for
         every shard => one compiled trace); page-opening tuples replay the
         eager path. On refusal the table and every shard roll back."""
+        self._check_swap_guard()
+        self._check_no_staged()
         values = np.asarray(values, np.float32).ravel()
         if values.size == 0:
             return
@@ -337,30 +400,57 @@ class ShardedHippoIndex:
                                   jnp.int32(self.spec.to_local(int(p))))
             self._apply_shard(s, st)
 
+    def dirty_shards(self) -> np.ndarray:
+        """Shard ids owning at least one dirty page (pending vacuum work)."""
+        dirty_pages = np.flatnonzero(self.table.dirty[: self.table.num_pages])
+        return np.unique(dirty_pages // self.spec.pages_per_shard)
+
     def vacuum(self) -> int:
         """§5.2 lazy maintenance, shard-grouped: dirty pages re-summarize
         entries inside their owning shards only (dirty spans touch each shard
         independently). Returns total entries re-summarized."""
+        self._check_swap_guard()
+        shards = self.dirty_shards()
+        if shards.size == 0:
+            return 0
+        total = 0
+        for s in shards:
+            total += self._vacuum_shard_locked(int(s))
+        return total
+
+    def vacuum_shard(self, s: int) -> int:
+        """Vacuum one shard: re-summarize its entries covering dirty pages
+        and clear *only that shard's* dirty notes. The per-shard unit of work
+        the async writer drains between query batches — other shards' dirty
+        pages stay queued, and their state/summaries are untouched. Returns
+        entries re-summarized (0 if the shard has no dirty pages)."""
+        self._check_swap_guard()
+        return self._vacuum_shard_locked(s)
+
+    def _vacuum_shard_locked(self, s: int) -> int:
+        """``vacuum_shard`` body without the swap guard — for the writer,
+        which holds ``swap_in_flight`` itself while draining a vacuum."""
         dirty_pages = np.flatnonzero(self.table.dirty[: self.table.num_pages])
+        dirty_pages = dirty_pages[dirty_pages // self.spec.pages_per_shard == s]
         if dirty_pages.size == 0:
             return 0
         keys, valid = self._slabs()
-        total = 0
-        for s in np.unique(dirty_pages // self.spec.pages_per_shard):
-            st = shard_state(self.state.shards, int(s))
-            affected = np.zeros((self.cfg.max_slots,), bool)
-            lo = self.spec.page_lo(int(s))
-            for p in dirty_pages[dirty_pages // self.spec.pages_per_shard == s]:
-                slot, _ = hix.locate_slot(st, jnp.int32(int(p) - lo))
-                affected[int(slot)] = True
-            st = hix.resummarize_slots(self.cfg, st, keys[int(s)],
-                                       valid[int(s)], jnp.asarray(affected))
-            self._apply_shard(int(s), st)
-            total += int(affected.sum())
+        st = shard_state(self.state.shards, s)
+        affected = np.zeros((self.cfg.max_slots,), bool)
+        lo = self.spec.page_lo(s)
+        for p in dirty_pages:
+            slot, _ = hix.locate_slot(st, jnp.int32(int(p) - lo))
+            affected[int(slot)] = True
+        st = hix.resummarize_slots(self.cfg, st, keys[s], valid[s],
+                                   jnp.asarray(affected))
+        self._apply_shard(s, st)
         self.table.clear_dirty(dirty_pages)
+        n = int(affected.sum())
+        # one counted vacuum per shard that actually did work, on every
+        # entry point (vacuum / vacuum_shard / writer drain) alike
         self.counters.vacuums += 1
-        self.counters.entries_resummarized += total
-        return total
+        self.counters.entries_resummarized += n
+        return n
 
     # -- introspection -------------------------------------------------------
 

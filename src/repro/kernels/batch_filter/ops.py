@@ -1,4 +1,22 @@
-"""Public wrapper: pads to kernel tiling, handles CPU interpret fallback."""
+"""batch_filter public wrappers — the fused §3.2 match phase of the engine.
+
+Shapes/dtypes: ``batch_filter(queries (Q, W) uint32, entries (E, W) uint32)
+-> (Q, E) int32 0/1`` — joint-bucket test of every query bitmap against
+every entry bitmap; ``batch_filter_sharded`` adds a leading shard axis,
+``entries (S, E, W) -> (S, Q, E)``, one grid over the whole shard axis.
+W = ceil(resolution / 32) packed words (``core.bitmap``).
+
+Wrappers pad Q/E to kernel block multiples and W to the 128-lane width
+(zero pads AND to zero, so padding never creates a match), then slice the
+result back. On CPU backends the Pallas kernel runs in interpret mode for
+validation; ``ref.py`` holds the jnp reference twin that is the CPU
+execution path.
+
+Equivalence contract: the sharded form is the unsharded form vmapped over
+the shard axis — ``batch_filter_sharded(q, e)[s] == batch_filter(q, e[s])``
+bit-exactly, which is what lets ``core.index.search_many_sharded`` reduce
+per-shard results into the unsharded answer.
+"""
 from __future__ import annotations
 
 from functools import partial

@@ -1,4 +1,17 @@
-"""Public wrapper: pads to kernel tiling, handles CPU interpret fallback."""
+"""bitmap_and public wrapper — the §3.2 single-query entry filter.
+
+Shapes/dtypes: ``bitmap_and_any(entries (E, W) uint32, query (W,) uint32)
+-> (E,) int32 0/1`` — 1 iff entry e shares at least one set bucket bit with
+the query bitmap (the paper's joint-bucket test, Fig. 3). W =
+ceil(resolution / 32) packed words (``core.bitmap``).
+
+The wrapper pads E to the kernel block and W to the 128-lane width (zero
+pads AND to zero, so padding never creates a match) and slices back. On CPU
+backends the Pallas kernel runs in interpret mode for validation;
+``ref.py`` is the jnp reference twin and the CPU execution path. The
+batched engine uses ``kernels.batch_filter`` (a leading query axis, plus a
+sharded grid); per shard and per query all three agree bit-exactly.
+"""
 from __future__ import annotations
 
 from functools import partial

@@ -1,4 +1,20 @@
-"""Public wrapper for the bucketize kernel."""
+"""bucketize public wrapper — the §4.1 complete-histogram probe.
+
+Shapes/dtypes: ``bucketize_values(values (N,) f32, bounds (H+1,) f32,
+resolution: int) -> (N,) int32`` bucket ids in [0, H), clamped at the
+domain edges. ``bounds`` are the strictly-increasing equi-depth boundaries
+(``core.histogram``); the kernel binary-searches them per value.
+
+The wrapper pads N to the kernel block and H+1 to the 128-lane width with
++inf so padding never wins a comparison, then slices back. On CPU backends
+the Pallas kernel runs in interpret mode for validation; ``ref.py`` is the
+jnp reference twin and the CPU execution path — both match bit-exactly for
+strictly-increasing boundaries. Build (Algorithm 2), search (predicate
+conversion), and maintenance (Algorithm 3) all bucketize through this one
+surface, which is what keeps the unsharded and sharded indexes agreeing:
+shards share the global ``bounds``, so a value buckets identically no
+matter which shard owns its page.
+"""
 from __future__ import annotations
 
 from functools import partial

@@ -1,4 +1,20 @@
-"""Public wrapper for the page_inspect kernel."""
+"""page_inspect public wrapper — §3.3 exact inspection of candidate pages.
+
+Shapes/dtypes: ``page_inspect(keys (P, C) f32, valid (P, C) bool, mask (P,)
+bool, lo, hi) -> (qual (P, C) bool, counts (P,) int32)`` — the exact
+tuple-level predicate test over the pages Algorithm 1's bitmap filter could
+not rule out (``mask``), with per-page qualifying counts. C is the page
+cardinality (``page_card``), lo/hi the closed predicate interval (±inf
+already clamped to finite f32 by ``core.predicate``).
+
+The wrapper pads P to the kernel block (padded pages carry mask=False and
+count 0) and slices back. On CPU backends the Pallas kernel runs in
+interpret mode for validation; ``ref.py`` is the jnp reference twin and the
+CPU execution path. Inspection is exact, which is the root of the layer
+equivalence contract: per-shard inspections over a partition of the page
+space sum bit-identically to the unsharded inspection, so every search
+path (scalar, batched, sharded, staged-overlay) returns the same counts.
+"""
 from __future__ import annotations
 
 from functools import partial

@@ -1,3 +1,4 @@
 from repro.runtime.fault import StepWatchdog, resilient_loop  # noqa: F401
 from repro.runtime.elastic import reshard_for_mesh  # noqa: F401
 from repro.runtime.engine import EngineStats, QueryEngine, QueryTicket  # noqa: F401
+from repro.runtime.writer import MaintenanceWriter, WriterStats  # noqa: F401

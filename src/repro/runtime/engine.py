@@ -26,6 +26,29 @@ same compiled traces. Shards no admitted query can match are skipped
 entirely (partition pruning), and per-query counts are reduced across the
 dispatched shards on the way out. Per-shard occupancy lands in
 ``EngineStats.shard_queries`` / ``shard_slots``.
+
+Shapes/dtypes on the dispatch boundary: predicates convert once per batch to
+(Q, W) uint32 packed bucket bitmaps plus (Q,) float32 interval bounds; dense
+mode runs one (Q=batch)-wide program, sharded mode runs per-shard programs at
+bucketed widths. Equivalence contract: for the same predicate stream, dense
+mode on ``HippoIndex``, dense mode on ``ShardedHippoIndex`` (fused (Q, S)
+count-reduce), and the summary-routed sharded dispatch all return
+bit-identical counts.
+
+Writes (``runtime.writer.MaintenanceWriter``): ``write()``/``delete()``
+stage maintenance instead of running Algorithm 3 on the query path; staged
+rows are overlaid into counts so results never go stale, and the engine
+drains shard queues between batches under one of three interleave policies:
+
+  sync             no writer — write() runs Algorithm 3 immediately and
+                   delete() vacuums immediately (the baseline the async
+                   benchmark contrasts)
+  between_batches  after each ``run_batch``, drain up to ``drain_units``
+                   shard queues/vacuums (default for sharded indexes)
+  on_depth         drain everything once ``queue_depth`` >= ``drain_depth``
+  manual           drain only on explicit ``flush()``
+
+Queue depth, staged rows, and drain latency land in ``EngineStats``.
 """
 from __future__ import annotations
 
@@ -34,6 +57,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.predicate import Predicate
+from repro.runtime.writer import MaintenanceWriter
 
 _EMPTY = Predicate(lo=1.0, hi=0.0)   # lo > hi: matches nothing
 
@@ -62,6 +86,15 @@ class EngineStats:
     shards_pruned: int = 0             # shard dispatches skipped via summaries
     shard_queries: dict = field(default_factory=dict)  # shard -> real queries
     shard_slots: dict = field(default_factory=dict)    # shard -> slots incl. pads
+    # -- async maintenance (runtime.writer) ----------------------------------
+    writes: int = 0          # tuples written through the engine
+    deletes: int = 0         # tuples deleted through the engine (incl. staged kills)
+    drains: int = 0          # drain units applied (shard insert queues + vacuums)
+    drained_rows: int = 0    # staged rows applied to the index by drains
+    drain_us: float = 0.0    # cumulative wall time spent inside writer drains
+    queue_depth: int = 0     # staged tuples pending after the last engine op
+    peak_queue_depth: int = 0
+    staged_rows: int = 0     # live staged rows currently overlaid into counts
 
     @property
     def occupancy(self) -> float:
@@ -80,15 +113,27 @@ class EngineStats:
                 for s in sorted(self.shard_slots) if self.shard_slots[s]}
 
 
+_DRAIN_POLICIES = ("sync", "between_batches", "on_depth", "manual")
+
+
 class QueryEngine:
     """Lock-step batched query executor with slot recycling.
 
     ``sharded`` selects the per-shard dispatch path; by default it turns on
     whenever the index exposes the partition-layer routing surface
     (``plan_batch`` / ``search_batch_shard_arrays``).
+
+    ``drain_policy`` selects the maintenance interleave (see module
+    docstring); the default is ``between_batches`` when the index supports a
+    writer and ``sync`` otherwise. ``drain_units`` bounds the shard
+    queues/vacuums applied per batch under ``between_batches``;
+    ``drain_depth`` is the ``on_depth`` trigger.
     """
 
-    def __init__(self, index, batch: int = 64, sharded: bool | None = None):
+    def __init__(self, index, batch: int = 64, sharded: bool | None = None,
+                 drain_policy: str | None = None, drain_units: int = 1,
+                 drain_depth: int = 256,
+                 writer: MaintenanceWriter | None = None):
         if batch < 1:
             raise ValueError(f"batch must be >= 1, got {batch}")
         self.index = index
@@ -99,10 +144,32 @@ class QueryEngine:
             raise ValueError("sharded=True needs a ShardedHippoIndex-style "
                              "index (plan_batch/search_batch_shard_arrays)")
         self.sharded = sharded
+        supports_writer = hasattr(index, "plan_batch")
+        if drain_policy is None:
+            drain_policy = "between_batches" if supports_writer else "sync"
+        if drain_policy not in _DRAIN_POLICIES:
+            raise ValueError(f"drain_policy must be one of {_DRAIN_POLICIES}, "
+                             f"got {drain_policy!r}")
+        if drain_policy != "sync" and not supports_writer:
+            raise ValueError(
+                "async drain policies need a ShardedHippoIndex-style index "
+                "(per-shard queues route by ShardSpec); use "
+                "drain_policy='sync' for an unsharded index")
+        self.drain_policy = drain_policy
+        self.drain_units = drain_units
+        self.drain_depth = drain_depth
+        if writer is not None and writer.index is not index:
+            raise ValueError("writer is bound to a different index than the "
+                             "engine's — its staged rows and drains would "
+                             "target the wrong index")
+        if writer is None and drain_policy != "sync":
+            writer = MaintenanceWriter(index)
+        self.writer = writer
         self.slots: list[QueryTicket | None] = [None] * batch
         self.queue: list[QueryTicket] = []
         self.stats = EngineStats()
         self._next_qid = 0
+        self._auto_drain_suspended = False
 
     # -- admission (mirrors BatchServer.admit) -------------------------------
 
@@ -119,6 +186,62 @@ class QueryEngine:
             if self.slots[i] is None and self.queue:
                 self.slots[i] = self.queue.pop(0)
 
+    # -- writes (async maintenance surface) ----------------------------------
+
+    def write(self, value: float) -> None:
+        """Insert one tuple. Sync policy runs Algorithm 3 immediately; async
+        policies stage the row into its shard's queue (a host list append)
+        and let the interleave policy drain it off the query path. Counts
+        include the staged row either way."""
+        self.stats.writes += 1
+        if self.writer is None:
+            self.index.insert(float(value))
+            return
+        self.writer.write(float(value))
+        if (self.drain_policy == "on_depth"
+                and self.writer.queue_depth >= self.drain_depth):
+            self._drain(None)
+        self._sync_writer_stats()
+
+    def delete(self, lo: float, hi: float) -> int:
+        """Delete tuples with key in [lo, hi]. The validity-mask update is
+        immediate on every policy (queries stay exact, §5.2 lazy deletes);
+        sync policy then vacuums on the spot, async policies queue the dirty
+        shards for drained ``vacuum_shard`` calls. Returns tuples deleted."""
+        if self.writer is None:
+            n = self.index.table.delete_where(lo, hi)
+            self.index.vacuum()
+            self.stats.deletes += n
+            return n
+        n = self.writer.delete(lo, hi)
+        self.stats.deletes += n
+        self._sync_writer_stats()
+        return n
+
+    def flush(self) -> int:
+        """Drain every pending shard queue and vacuum now (explicit policy).
+        Returns staged rows applied to the index."""
+        if self.writer is None:
+            return 0
+        rows = self._drain(None)
+        return rows
+
+    def _drain(self, max_units: int | None) -> int:
+        rows = self.writer.drain(max_units)
+        self._auto_drain_suspended = False      # a successful drain re-arms
+        self._sync_writer_stats()
+        return rows
+
+    def _sync_writer_stats(self) -> None:
+        w = self.writer
+        st = self.stats
+        st.drains = w.stats.drains
+        st.drained_rows = w.stats.drained_rows
+        st.drain_us = w.stats.total_drain_us
+        st.queue_depth = w.queue_depth
+        st.staged_rows = w.staged_rows
+        st.peak_queue_depth = max(st.peak_queue_depth, w.queue_depth)
+
     # -- execution ------------------------------------------------------------
 
     def run_batch(self) -> list[QueryTicket]:
@@ -127,6 +250,11 @@ class QueryEngine:
 
         Returns the tickets retired by this batch (empty if nothing pending).
         """
+        # Drain *before* executing: the drain sits between the previous
+        # batch and this one either way, and a drain refusal (slot capacity)
+        # then raises before any query work instead of discarding a fully
+        # computed batch on the way out.
+        self._maybe_drain_between_batches()
         self._admit()
         active = [i for i, t in enumerate(self.slots) if t is not None]
         if not active:
@@ -152,6 +280,21 @@ class QueryEngine:
             self.stats.pad_slots += self.batch - len(active)
         self.stats.served += len(finished)
         return finished
+
+    def _maybe_drain_between_batches(self) -> None:
+        """Between-batches drain. A drain refusal (e.g. shard slot capacity)
+        raises once, loudly, then suspends auto-draining so queries keep
+        serving exactly through the staging overlay; an explicit ``flush()``
+        (after fixing capacity) or ``writer.discard()`` re-arms it."""
+        if (self.writer is None or self.drain_policy != "between_batches"
+                or self._auto_drain_suspended
+                or not self.writer.pending_units):
+            return
+        try:
+            self._drain(self.drain_units)
+        except RuntimeError:
+            self._auto_drain_suspended = True
+            raise
 
     def _execute_dense(self, active: list[int]) -> tuple:
         """One full-width device program; pads fill the free slots."""
@@ -205,6 +348,15 @@ class QueryEngine:
                 self.stats.shard_queries.get(s, 0) + int(hit.size))
             self.stats.shard_slots[s] = (
                 self.stats.shard_slots.get(s, 0) + width)
+        # Staging overlay: rows waiting in a writer's queues belong to no
+        # index entry yet, so summary routing can't see them — their counts
+        # add on top, independent of which shards were dispatched or pruned.
+        # Read the overlay from the index's *attached* writer (the single
+        # source of truth), not this engine's handle: a sync-policy engine,
+        # or one whose writer was superseded, must still see staged rows.
+        staging = getattr(self.index, "staging", None)
+        if staging is not None and staging.staged_rows:
+            counts += staging.staged_counts(los, his).sum(axis=1)
         return counts, inspected, matched
 
     def drain(self) -> list[QueryTicket]:

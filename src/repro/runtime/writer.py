@@ -1,0 +1,426 @@
+"""Async maintenance writer — insert/vacuum off the query path (§5, Alg. 3).
+
+The paper's headline maintenance claim (up to three orders of magnitude less
+insert overhead than a B+-Tree, §5/Fig. 6c) assumes maintenance does not sit
+on the query path. In this repro it did: every ``insert`` ran Algorithm 3
+synchronously — one jit dispatch plus a full slab-view invalidation — before
+the next query batch could run. ``MaintenanceWriter`` moves that work between
+engine batches, exploiting the partition layer's locality (PR 2): a write
+touches exactly one shard's arrays, so shard s can be rebuilt while every
+other shard keeps serving.
+
+Lifecycle (per shard):
+
+  stage    ``write(v)`` routes v by ``ShardSpec`` page arithmetic into the
+           owning shard's pending queue — a small staging buffer kept in
+           table-append order, with a sorted view for overlay counting.
+           Nothing touches the device index; staging is a host list append.
+  overlay  queries stay exact while rows wait: ``search_batch`` (and the
+           engine's routed dispatch) add the staged rows matching each
+           predicate on top of the index counts — the never-stale contract.
+           ``delete(lo, hi)`` marks table tuples invalid immediately (queries
+           read the validity mask, §5.2 lazy deletes) and kills staged rows
+           in range before they ever reach the table.
+  drain    between engine batches the writer takes one shard's whole queue,
+           appends its tuples to the table, and applies Algorithm 3 as a
+           single fused ``insert_batch`` against a *copy* of that shard's
+           slice of ``ShardedHippoState``; dirty shards get their §5.2
+           ``vacuum_shard`` the same way. Queues drain in ascending shard
+           order so staged page ids land exactly where stage-time routing
+           predicted.
+  swap     one assignment publishes the rebuilt slice (``set_shard`` + a
+           refreshed summary bitmap) and the table patches just that shard's
+           slab into the cached device view (``refresh_shard_slabs``) — no
+           full (S, PPS, C) re-upload. While the swap is in flight the index
+           refuses queries and maintenance (``swap_in_flight``) instead of
+           serving a shard whose state and table disagree.
+
+Failure atomicity: a drain that refuses (slot capacity) rolls the table back
+to its pre-drain snapshot and requeues the shard's staged rows — the overlay
+keeps counts exact, and the error surfaces from ``drain``/``flush``, not from
+a query.
+
+``runtime.engine.QueryEngine`` owns the interleave policy (drain-between-
+batches, drain-on-queue-depth, explicit ``flush``); the writer itself is
+policy-free mechanism.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import index as hix
+from repro.core.partition import ShardedHippoState, set_shard, shard_state, summary_of
+
+_STAGE_BUCKET_MIN = 8   # smallest device overlay width (trace bucketing)
+
+
+class _ShardQueue:
+    """Pending inserts for one shard, kept in table-append order.
+
+    ``live`` marks rows not yet killed by a staged delete; the sorted view of
+    live values backs the overlay's interval counting (two binary searches
+    per query per shard).
+    """
+    __slots__ = ("values", "live", "n_live", "_sorted")
+
+    def __init__(self):
+        self.values: list[float] = []
+        self.live: list[bool] = []
+        self.n_live = 0
+        self._sorted: np.ndarray | None = None
+
+    def append(self, v: float) -> None:
+        self.values.append(v)
+        self.live.append(True)
+        self.n_live += 1
+        self._sorted = None
+
+    def kill_range(self, lo: float, hi: float) -> int:
+        """Mark live staged values in [lo, hi] dead (a delete overtaking a
+        staged insert); they never reach the index's bitmaps."""
+        n = 0
+        for i, (v, alive) in enumerate(zip(self.values, self.live)):
+            if alive and lo <= v <= hi:
+                self.live[i] = False
+                n += 1
+        if n:
+            self.n_live -= n
+            self._sorted = None
+        return n
+
+    @property
+    def sorted_live(self) -> np.ndarray:
+        if self._sorted is None:
+            self._sorted = np.sort(np.asarray(
+                [v for v, alive in zip(self.values, self.live) if alive],
+                np.float32))
+        return self._sorted
+
+
+@dataclass
+class WriterStats:
+    staged: int = 0           # tuples ever staged
+    killed: int = 0           # staged tuples overtaken by a delete
+    drains: int = 0           # drain units applied (insert queues + vacuums)
+    drained_rows: int = 0     # live tuples applied to the index by drains
+    vacuums: int = 0          # shard vacuums drained
+    last_drain_us: float = 0.0
+    total_drain_us: float = 0.0
+
+
+class MaintenanceWriter:
+    """Per-shard staged maintenance over a ``ShardedHippoIndex``.
+
+    Constructing the writer attaches it to the index (``index.staging``), so
+    every search path folds the staging overlay into counts from then on.
+    """
+
+    def __init__(self, index):
+        for attr in ("spec", "state", "plan_batch"):
+            if not hasattr(index, attr):
+                raise ValueError(
+                    "MaintenanceWriter needs a ShardedHippoIndex-style index "
+                    "(ShardSpec routing + stacked per-shard state); got "
+                    f"{type(index).__name__}")
+        prior = getattr(index, "staging", None)
+        if prior is not None and prior.queue_depth:
+            # Replacing the attached writer would detach its overlay and
+            # silently drop its staged rows from every count.
+            raise RuntimeError(
+                f"index already has a writer with {prior.queue_depth} staged "
+                f"rows pending: flush() it before attaching a new one")
+        self.index = index
+        index.staging = self
+        self._queues: dict[int, _ShardQueue] = {}
+        self._staged_total = 0       # pending tuples, dead rows included
+        self._version = 0            # bumps on any staging change
+        self._dev_cache: tuple | None = None
+        self.stats = WriterStats()
+
+    # -- staging (the off-query-path write surface) --------------------------
+
+    def _check_attached(self) -> None:
+        """Refuse staging through a writer the index no longer consults —
+        its rows would never be overlaid into counts."""
+        if self.index.staging is not self:
+            raise RuntimeError(
+                "writer is detached: the index has a different (newer) "
+                "staging writer attached; stage through that one")
+
+    def _tail_pos(self) -> int:
+        """Absolute tuple position of the table's append tail."""
+        t = self.index.table
+        if t.num_pages == 0:
+            return 0
+        return t.num_pages * t.page_card - (t.page_card - t.fill)
+
+    def write(self, value: float) -> int:
+        """Stage one insert; returns the owning shard.
+
+        Routing is pure ``ShardSpec`` arithmetic on the page the tuple *will*
+        occupy once every earlier staged row has drained — appends are
+        sequential, so the k-th staged tuple's page is fully determined by
+        the table tail. Refuses (before staging) writes the shard layout
+        cannot ever hold, mirroring the synchronous path's refusal.
+        """
+        self.index._check_swap_guard()
+        self._check_attached()
+        spec = self.index.spec
+        pos = self._tail_pos() + self._staged_total
+        page = pos // self.index.table.page_card
+        s = spec.owner(page)
+        if s >= spec.num_shards:
+            raise RuntimeError(
+                f"shard layout full: staged tuple would land on page {page}, "
+                f"past shard {spec.num_shards - 1}'s slab "
+                f"(pages_per_shard={spec.pages_per_shard}); rebuild with more "
+                f"shards or larger slabs")
+        self._queues.setdefault(s, _ShardQueue()).append(float(value))
+        self._staged_total += 1
+        self._version += 1
+        self._dev_cache = None
+        self.stats.staged += 1
+        return s
+
+    def delete(self, lo: float, hi: float) -> int:
+        """Apply a delete: table tuples in range go invalid now (queries read
+        the validity mask, so results stay exact with zero index work), staged
+        rows in range die before ever reaching the table, and the dirtied
+        shards queue for an async ``vacuum_shard`` drain. Returns tuples
+        deleted (table + staged)."""
+        self.index._check_swap_guard()
+        self._check_attached()
+        table = self.index.table
+        spec = self.index.spec
+        was_fresh = table._dev_shard is not None and not table._dev_shard_stale
+        n = table.delete_where(lo, hi)
+        if n and was_fresh:
+            # every mutated page carries a dirty note until its vacuum, so
+            # the dirty owners are exactly the slabs to patch
+            table.refresh_shard_slabs(self.index.dirty_shards(),
+                                      spec.num_shards, spec.pages_per_shard)
+        killed = 0
+        for q in self._queues.values():
+            killed += q.kill_range(lo, hi)
+        if killed:
+            self._version += 1
+            self._dev_cache = None
+            self.stats.killed += killed
+        return n + killed
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def queue_depth(self) -> int:
+        """Staged tuples pending a drain (dead rows included: they still
+        occupy a staged table position)."""
+        return self._staged_total
+
+    @property
+    def staged_rows(self) -> int:
+        """Live staged rows currently overlaid into query counts."""
+        return sum(q.n_live for q in self._queues.values())
+
+    def pending_shards(self) -> list[int]:
+        """Shards with queued inserts, in the mandatory drain order."""
+        return sorted(s for s, q in self._queues.items() if q.values)
+
+    def pending_vacuum_shards(self) -> list[int]:
+        return [int(s) for s in self.index.dirty_shards()]
+
+    @property
+    def pending_units(self) -> int:
+        """Drain units outstanding (insert queues + dirty shards)."""
+        return len(self.pending_shards()) + len(self.pending_vacuum_shards())
+
+    def queue_depths(self) -> dict[int, int]:
+        """Per-shard staged tuple counts (engine stats surface)."""
+        return {s: len(q.values) for s, q in self._queues.items() if q.values}
+
+    # -- overlay (queries never go stale) ------------------------------------
+
+    def staged_counts(self, los, his) -> np.ndarray:
+        """(Q, S) exact counts of live staged rows per (query, shard).
+
+        Two binary searches per (query, shard) on the per-shard sorted
+        staging buffers; empty predicates (lo > hi) count zero. Host-side
+        twin of ``core.index.staged_overlay_counts``.
+        """
+        los = np.asarray(los, np.float32)
+        his = np.asarray(his, np.float32)
+        out = np.zeros((los.shape[0], self.index.spec.num_shards), np.int64)
+        for s, q in self._queues.items():
+            a = q.sorted_live
+            if a.size == 0:
+                continue
+            out[:, s] = (np.searchsorted(a, his, side="right")
+                         - np.searchsorted(a, los, side="left"))
+        return np.maximum(out, 0)
+
+    def device_buffers(self) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """(vals (S, B) f32, live (S, B) bool) staged rows for the fused
+        device overlay (``core.index.search_many_sharded_staged``). B is the
+        max per-shard live depth rounded to a power of two (min 8) so the
+        overlay re-traces only when the queue outgrows its bucket."""
+        if self._dev_cache is not None and self._dev_cache[0] == self._version:
+            return self._dev_cache[1], self._dev_cache[2]
+        s_n = self.index.spec.num_shards
+        depth = max((q.n_live for q in self._queues.values()), default=0)
+        b = _STAGE_BUCKET_MIN
+        while b < depth:
+            b *= 2
+        vals = np.zeros((s_n, b), np.float32)
+        live = np.zeros((s_n, b), bool)
+        for s, q in self._queues.items():
+            a = q.sorted_live
+            vals[s, : a.size] = a
+            live[s, : a.size] = True
+        out = (jnp.asarray(vals), jnp.asarray(live))
+        self._dev_cache = (self._version, *out)
+        return out
+
+    # -- drain / swap --------------------------------------------------------
+
+    def drain(self, max_units: int | None = None) -> int:
+        """Apply up to ``max_units`` drain units (default: everything).
+
+        A unit is one shard's whole insert queue or one shard's vacuum.
+        Insert queues go first, in ascending shard order — the order their
+        staged page ids were predicted in — then dirty shards vacuum.
+        Returns live rows applied to the index.
+        """
+        t0 = time.perf_counter()
+        units = rows = 0
+        for s in self.pending_shards():
+            if max_units is not None and units >= max_units:
+                break
+            rows += self._drain_shard(s)
+            units += 1
+        for s in self.pending_vacuum_shards():
+            if max_units is not None and units >= max_units:
+                break
+            self._drain_vacuum(s)
+            units += 1
+        if units:
+            us = (time.perf_counter() - t0) * 1e6
+            self.stats.drains += units
+            self.stats.last_drain_us = us
+            self.stats.total_drain_us += us
+        return rows
+
+    def flush(self) -> int:
+        """Drain every pending queue and vacuum; returns rows applied."""
+        return self.drain(max_units=None)
+
+    def discard(self) -> int:
+        """Drop every staged row without applying it; returns rows dropped.
+
+        The recovery path for a drain that keeps refusing (shard slot
+        capacity): the staged rows never reach the table or the index, and
+        counts simply stop including them. All-or-nothing by design — later
+        queues' page routing was predicted assuming earlier queues land, so
+        a single shard's queue cannot be dropped in isolation.
+        """
+        dropped = self._staged_total
+        self._queues.clear()
+        self._staged_total = 0
+        self._version += 1
+        self._dev_cache = None
+        return dropped
+
+    def _drain_shard(self, s: int) -> int:
+        """Drain shard s's queue: append to the table, rebuild a copy of the
+        shard's state slice via Algorithm 3, swap it in atomically."""
+        idx = self.index
+        table = idx.table
+        spec = idx.spec
+        q = self._queues.pop(s)
+        values = np.asarray(q.values, np.float32)
+        live = np.asarray(q.live, bool)
+        snap_pages, snap_fill = table.num_pages, table.fill
+        was_fresh = table._dev_shard is not None and not table._dev_shard_stale
+        idx.swap_in_flight = s
+        try:
+            st = shard_state(idx.state.shards, s)   # working copy (functional)
+            pages = np.empty(values.shape[0], np.int64)
+            offs = np.empty(values.shape[0], np.int64)
+            for i, v in enumerate(values):
+                pages[i], _ = table.insert(float(v))
+                offs[i] = table.fill - 1
+            if pages.size and not (pages // spec.pages_per_shard == s).all():
+                raise RuntimeError(
+                    f"writer invariant violated: shard {s} drain appended "
+                    f"pages outside its slab (was the table mutated behind "
+                    f"the staged queues?)")
+            # dead staged rows occupy their predicted slots but never go
+            # live — they keep later queues' page routing exact
+            for p, o in zip(pages[~live], offs[~live]):
+                table.valid[int(p), int(o)] = False
+            lp = (pages - spec.page_lo(s)).astype(np.int32)
+            # Algorithm 3 against the copy: one fused scatter for tuples on
+            # already-summarized pages, padded to a power-of-two width so
+            # drains of different queue depths share one compiled trace ...
+            old = live & (lp <= int(st.summarized_until))
+            if old.any():
+                n = values.shape[0]
+                b = _STAGE_BUCKET_MIN
+                while b < n:
+                    b *= 2
+                pv = np.zeros((b,), np.float32)
+                pl = np.zeros((b,), np.int32)
+                pm = np.zeros((b,), bool)
+                pv[:n] = values
+                pl[:n] = np.clip(lp, 0, spec.pages_per_shard - 1)
+                pm[:n] = old
+                st = hix.insert_batch_existing(idx.cfg, st, jnp.asarray(pv),
+                                               jnp.asarray(pl),
+                                               jnp.asarray(pm))
+            # ... and the eager path for page-opening tuples (few: <= one per
+            # page_card staged rows), capacity-checked against the copy
+            for v, p in zip(values[live & ~old], lp[live & ~old]):
+                opens = int(p) > int(st.summarized_until)
+                if opens or idx.cfg.relocate_on_update:
+                    if int(st.num_slots) + 1 > idx.cfg.max_slots:
+                        raise RuntimeError(
+                            f"shard {s} at slot capacity "
+                            f"({int(st.num_slots)}/{idx.cfg.max_slots}); "
+                            f"rebuild with a larger max_slots")
+                st = hix.insert_tuple(idx.cfg, st, jnp.float32(v),
+                                      jnp.int32(int(p)))
+            # atomic swap: one assignment publishes the rebuilt slice +
+            # refreshed summary; every other shard's arrays are untouched
+            idx.state = ShardedHippoState(
+                shards=set_shard(idx.state.shards, s, st),
+                summaries=idx.state.summaries.at[s].set(summary_of(st)))
+        except Exception:
+            table.truncate_to(snap_pages, snap_fill)
+            self._queues[s] = q      # rows stay staged; overlay stays exact
+            raise
+        finally:
+            idx.swap_in_flight = None
+        self._staged_total -= len(q.values)
+        self._version += 1
+        self._dev_cache = None
+        if was_fresh:
+            table.refresh_shard_slabs([s], spec.num_shards,
+                                      spec.pages_per_shard)
+        applied = int(live.sum())
+        idx.counters.inserts += applied
+        self.stats.drained_rows += applied
+        return applied
+
+    def _drain_vacuum(self, s: int) -> int:
+        """Drain one shard's §5.2 vacuum under the swap guard."""
+        idx = self.index
+        idx.swap_in_flight = s
+        try:
+            n = idx._vacuum_shard_locked(s)
+        finally:
+            idx.swap_in_flight = None
+        self.stats.vacuums += 1
+        return n

@@ -38,6 +38,10 @@ class PagedTable:
     payload: dict = field(default_factory=dict)  # name -> (capacity, page_card) array
     _dev: tuple | None = field(default=None, repr=False, compare=False)  # device-view cache
     _dev_shard: tuple | None = field(default=None, repr=False, compare=False)  # slab-view cache
+    # Mutations mark the slab cache stale instead of dropping it, so a
+    # shard-local writer swap can patch just the touched slabs back in
+    # (``refresh_shard_slabs``) instead of re-uploading every shard.
+    _dev_shard_stale: bool = field(default=False, repr=False, compare=False)
 
     def __post_init__(self):
         if self.keys is None:
@@ -105,7 +109,8 @@ class PagedTable:
         per-shard entries never cover them, so they cost inspection FLOPs only
         inside their shard's fixed-shape program."""
         key = (num_shards, pages_per_shard, self.num_pages)
-        if self._dev_shard is None or self._dev_shard[0] != key:
+        if (self._dev_shard is None or self._dev_shard_stale
+                or self._dev_shard[0] != key):
             total = num_shards * pages_per_shard
             if total < self.num_pages:
                 raise ValueError(
@@ -118,7 +123,47 @@ class PagedTable:
             shape = (num_shards, pages_per_shard, self.page_card)
             self._dev_shard = (key, jnp.asarray(keys.reshape(shape)),
                                jnp.asarray(valid.reshape(shape)))
+            self._dev_shard_stale = False
         return self._dev_shard
+
+    def _host_slab(self, s: int, pages_per_shard: int) -> tuple:
+        """(keys, valid) host copy of shard s's slab, zero/invalid padded."""
+        lo = s * pages_per_shard
+        hi = min(lo + pages_per_shard, self.num_pages)
+        keys = np.zeros((pages_per_shard, self.page_card), np.float32)
+        valid = np.zeros((pages_per_shard, self.page_card), bool)
+        if hi > lo:
+            keys[: hi - lo] = self.keys[lo:hi]
+            valid[: hi - lo] = self.valid[lo:hi]
+        return keys, valid
+
+    def refresh_shard_slabs(self, shard_ids, num_shards: int,
+                            pages_per_shard: int) -> bool:
+        """Patch a stale slab cache in place after shard-local mutations.
+
+        Contract: every mutation since the cache went stale must be confined
+        to the slabs in ``shard_ids`` (the writer's drain/swap guarantees
+        this; ``delete_where`` callers can pass the owners of the pages they
+        dirtied). Each touched slab is re-uploaded with one (PPS, C) H2D
+        instead of rebuilding the whole (S, PPS, C) view. Returns True if the
+        cache was patched; False if there was no compatible cache (the next
+        ``device_*_sharded`` call rebuilds fully — always correct).
+        """
+        if self._dev_shard is None:
+            return False
+        (cs, cpps, _), keys_dev, valid_dev = self._dev_shard
+        if (cs, cpps) != (num_shards, pages_per_shard):
+            return False
+        if num_shards * pages_per_shard < self.num_pages:
+            return False                     # table outgrew the layout
+        for s in sorted(set(int(s) for s in shard_ids)):
+            hk, hv = self._host_slab(s, pages_per_shard)
+            keys_dev = keys_dev.at[s].set(jnp.asarray(hk))
+            valid_dev = valid_dev.at[s].set(jnp.asarray(hv))
+        key = (num_shards, pages_per_shard, self.num_pages)
+        self._dev_shard = (key, keys_dev, valid_dev)
+        self._dev_shard_stale = False
+        return True
 
     def device_keys_sharded(self, num_shards: int, pages_per_shard: int) -> jnp.ndarray:
         return self._shard_views(num_shards, pages_per_shard)[1]
@@ -155,7 +200,7 @@ class PagedTable:
         self.valid[p, self.fill] = True
         self.fill += 1
         self._dev = None
-        self._dev_shard = None
+        self._dev_shard_stale = True
         return p, new_page
 
     def insert_batch(self, values: np.ndarray) -> tuple[int, int]:
@@ -170,11 +215,13 @@ class PagedTable:
         """Mark tuples with key in [lo, hi] deleted; set page dirty notes."""
         live = self.valid[: self.num_pages]
         hit = live & (self.keys[: self.num_pages] >= lo) & (self.keys[: self.num_pages] <= hi)
+        if not hit.any():
+            return 0                      # nothing changed: keep device caches
         npages = hit.any(axis=1)
         self.valid[: self.num_pages] &= ~hit
         self.dirty[: self.num_pages] |= npages
         self._dev = None
-        self._dev_shard = None
+        self._dev_shard_stale = True
         return int(hit.sum())
 
     def clear_dirty(self, page_ids: np.ndarray) -> None:
@@ -195,7 +242,7 @@ class PagedTable:
         self.num_pages = num_pages
         self.fill = fill
         self._dev = None
-        self._dev_shard = None
+        self._dev_shard_stale = True
 
     def _grow(self) -> None:
         add = max(self.capacity_pages // 2, 64)

@@ -1,13 +1,16 @@
 """Shared pytest configuration: test tiers.
 
 Tier-1 (everything): ``PYTHONPATH=src python -m pytest -x -q``
-Fast inner loop:     ``PYTHONPATH=src python -m pytest -x -q -m "not slow and not shard"``
+Fast inner loop:     ``PYTHONPATH=src python -m pytest -x -q -m "not slow and not shard and not writer"``
 Partition suite:     ``PYTHONPATH=src python -m pytest -x -q -m shard``
+Writer suite:        ``PYTHONPATH=src python -m pytest -x -q -m writer``
 
 ``slow`` marks the model/launch/system modules that compile transformer steps
 or fork subprocess meshes; ``shard`` marks the partition-layer suite (many
-distinct stacked-state jit shapes, so it compiles for ~40s). Excluding both
-keeps the core index/kernel/maintenance inner loop well under a minute.
+distinct stacked-state jit shapes, so it compiles for ~40s); ``writer`` marks
+the async-maintenance suite (stacked-state + drain traces, similar compile
+cost). Excluding all three keeps the core index/kernel/maintenance inner
+loop well under a minute. The markers are documented in README.md.
 """
 
 
@@ -21,3 +24,8 @@ def pytest_configure(config):
         "shard: partition-layer tests (core.partition / sharded engine); "
         "excluded from the fast inner loop (-m \"not slow and not shard\") "
         "to keep it under a minute — run just these with -m shard")
+    config.addinivalue_line(
+        "markers",
+        "writer: async-maintenance tests (runtime.writer staged queues, "
+        "drain/swap lifecycle, staleness refusal); compiles stacked-state "
+        "traces like the shard suite — run just these with -m writer")

@@ -1,0 +1,46 @@
+"""Documentation sanity: the README exists and its module map is honest —
+every ``repro.*`` module it names must import cleanly, and every registered
+benchmark must describe itself for ``benchmarks/run.py --list``."""
+import importlib
+import pathlib
+import re
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def test_readme_exists_and_covers_basics():
+    readme = REPO / "README.md"
+    assert readme.exists(), "top-level README.md is missing"
+    text = readme.read_text()
+    for needle in ("quickstart", "pytest", "benchmarks", "module map"):
+        assert needle.lower() in text.lower(), f"README.md lacks {needle!r}"
+
+
+def test_readme_module_map_imports_cleanly():
+    text = (REPO / "README.md").read_text()
+    modules = sorted(set(re.findall(r"`(repro(?:\.\w+)+)`", text)))
+    assert len(modules) >= 8, f"README module map names too few modules: {modules}"
+    for mod in modules:
+        importlib.import_module(mod)
+
+
+def test_docs_pages_exist():
+    assert (REPO / "docs" / "architecture.md").exists()
+    assert (REPO / "docs" / "benchmarks.md").exists()
+
+
+def test_every_registered_benchmark_self_describes():
+    from benchmarks.run import MODULES, SUITES, describe
+    assert set(MODULES) == set(SUITES)
+    bench_dir = REPO / "benchmarks"
+    on_disk = {p.stem for p in bench_dir.glob("bench_*.py")}
+    registered = {m.__name__.rsplit(".", 1)[-1] for m in MODULES.values()}
+    assert on_disk == registered, (
+        f"bench modules on disk and registered in run.py diverge: "
+        f"{on_disk ^ registered}")
+    benchdoc = (REPO / "docs" / "benchmarks.md").read_text()
+    for name in SUITES:
+        desc = describe(name)
+        assert "missing module docstring" not in desc, name
+        assert len(desc) > 10, f"{name}: one-line description too thin: {desc!r}"
+        assert name in benchdoc, f"docs/benchmarks.md does not cover {name}"
