@@ -71,7 +71,10 @@ def run(card: int = CARD, batches=BATCHES) -> None:
         emit(f"engine_search_many_q{q}", us_batch, qps=round(qps_batch, 1),
              speedup=round(qps_batch / qps_loop, 2))
 
-        engine = QueryEngine(idx, batch=q)
+        # mode="dense" pins the engine to the same batched program as the
+        # raw path above, so this row isolates submit/slot bookkeeping cost
+        # (the compact default is measured in bench_selectivity_sweep)
+        engine = QueryEngine(idx, batch=q, mode="dense")
         engine.run_all(preds)  # warm the trace before timing
         us_eng = timeit(lambda: engine.run_all(preds), warmup=1, iters=3)
         emit(f"engine_run_all_q{q}", us_eng,

@@ -55,13 +55,15 @@ def run(card: int = CARD, shards=SHARDS) -> None:
         table = PagedTable.from_values(values.copy(), page_card=50)
         sidx = ShardedHippoIndex.create(table, num_shards=s,
                                         resolution=400, density=0.2)
-        engine = QueryEngine(sidx, batch=Q)
+        # sharded=True pins the summary-routed dispatch this bench measures
+        # (the engine's default mode is now the compact gather path)
+        engine = QueryEngine(sidx, batch=Q, sharded=True)
         counts = engine.run_all(preds)        # also warms every trace width
         assert (counts == want).all(), \
             f"sharded counts diverge from the unsharded path at S={s}"
 
-        us = timeit(lambda: QueryEngine(sidx, batch=Q).run_all(preds),
-                    warmup=1, iters=3)
+        us = timeit(lambda: QueryEngine(sidx, batch=Q, sharded=True)
+                    .run_all(preds), warmup=1, iters=3)
         qps = Q / (us / 1e6)
         if base_qps is None:
             base_qps = qps

@@ -2,13 +2,19 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
 Scale with --quick for CI-speed runs; ``--list`` prints every registered
-benchmark with the one-line description from its module docstring.
+benchmark with the one-line description from its module docstring;
+``--json out.json`` additionally writes the machine-readable result set
+(per-suite rows with parsed derived fields plus the run config) so the repo
+can accumulate ``BENCH_*.json`` trajectory files across PRs.
 
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig7] [--list]
+                                         [--json out.json]
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
 
@@ -23,8 +29,10 @@ from benchmarks import (
     bench_fig10_tpch,
     bench_kernels,
     bench_maintenance,
+    bench_selectivity_sweep,
     bench_shard_scaling,
 )
+from benchmarks import common
 
 # One registry: suite name -> (module, quick-aware runner). The module half
 # feeds --list (its docstring) and tests/test_docs.py's coverage check.
@@ -56,6 +64,11 @@ REGISTRY = {
                           lambda quick: bench_async_maintenance.run(
                               card=50_000 if quick else bench_async_maintenance.CARD,
                               rounds=3 if quick else bench_async_maintenance.ROUNDS)),
+    "selectivity_sweep": (bench_selectivity_sweep,
+                          lambda quick: bench_selectivity_sweep.run(
+                              card=100_000 if quick else bench_selectivity_sweep.CARD,
+                              selectivities=(0.01, 0.5) if quick
+                              else bench_selectivity_sweep.SELECTIVITIES)),
 }
 
 MODULES = {name: mod for name, (mod, _) in REGISTRY.items()}
@@ -70,13 +83,60 @@ def describe(name: str) -> str:
     return first or f"<{name}: missing module docstring>"
 
 
+def parse_derived(derived: str) -> dict:
+    """Parse a row's ';'-separated ``key=value`` derived field, coercing
+    values to int/float where they parse (the JSON half of the CSV contract
+    in benchmarks/common.py)."""
+    out = {}
+    for item in derived.split(";"):
+        if not item:
+            continue
+        key, _, val = item.partition("=")
+        for cast in (int, float):
+            try:
+                out[key] = cast(val)
+                break
+            except ValueError:
+                continue
+        else:
+            out[key] = val
+    return out
+
+
+def rows_to_json(suite_rows: dict[str, list], *, quick: bool) -> dict:
+    """Machine-readable result document for ``--json``: every emitted row
+    grouped by suite, derived fields parsed, plus the run configuration —
+    the schema the repo's ``BENCH_*.json`` trajectory files accumulate."""
+    return {
+        "schema": 1,
+        "generated_unix_s": int(time.time()),
+        "config": {
+            "quick": quick,
+            "python": platform.python_version(),
+            "platform": platform.platform(),
+        },
+        "suites": {
+            suite: [{"name": name, "us_per_call": round(us, 1),
+                     "qps": parse_derived(derived).get("qps"),
+                     "derived": parse_derived(derived)}
+                    for name, us, derived in rows]
+            for suite, rows in suite_rows.items()
+        },
+    }
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--only", default=None, choices=sorted(SUITES))
+    ap.add_argument("--only", default=None, choices=sorted(SUITES),
+                    action="append",
+                    help="run only this suite (repeatable)")
     ap.add_argument("--list", action="store_true",
                     help="print each registered benchmark and its one-line "
                          "description, then exit")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="write the run's rows as machine-readable JSON "
+                         "(per-suite, derived fields parsed) to OUT")
     args = ap.parse_args(argv)
 
     if args.list:
@@ -87,12 +147,21 @@ def main(argv=None) -> None:
 
     print("name,us_per_call,derived")
     t0 = time.time()
+    suite_rows: dict[str, list] = {}
     for name, fn in SUITES.items():
-        if args.only and name != args.only:
+        if args.only and name not in args.only:
             continue
         print(f"# --- {name} ---", flush=True)
+        before = len(common.ROWS)
         fn(args.quick)
+        suite_rows[name] = common.ROWS[before:]
     print(f"# total_wall_s={time.time()-t0:.1f}", file=sys.stderr)
+    if args.json:
+        doc = rows_to_json(suite_rows, quick=args.quick)
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

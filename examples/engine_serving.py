@@ -7,10 +7,12 @@ mixed-selectivity range queries is admitted into a fixed-slot batch and
 executed one device program per batch (core.index.search_many), then the
 same stream is replayed through the per-query loop to show the throughput
 gap, then through a sharded index (core.partition) where the engine routes
-each batch through per-shard summary bitmaps, and finally with writes mixed
-in: the async maintenance writer (runtime.writer) stages inserts/deletes in
-per-shard queues and drains them between batches, with staged rows overlaid
-into every count. Counts are asserted identical between all paths.
+each batch through per-shard summary bitmaps, then through the default
+compact (gather) mode whose tickets also carry qualifying row ids, and
+finally with writes mixed in: the async maintenance writer (runtime.writer)
+stages inserts/deletes in per-shard queues and drains them between batches,
+with staged rows overlaid into every count. Counts are asserted identical
+between all paths.
 """
 import time
 
@@ -42,7 +44,7 @@ def main():
         preds.append(Predicate.between(lo, lo + float(rng.choice([200.0, 1e4, 1e5]))))
 
     engine = QueryEngine(idx, batch=64)
-    QueryEngine(idx, batch=64).run_all(preds[:1])   # warm the compiled trace
+    engine.run_all(preds)   # warm the compiled traces + the adaptive bucket
     t0 = time.perf_counter()
     counts = engine.run_all(preds)
     dt_engine = time.perf_counter() - t0
@@ -62,13 +64,14 @@ def main():
     assert (counts == loop_counts).all(), "engine must be exact"
     print(f"counts identical across paths; engine speedup {dt_loop/dt_engine:.1f}x")
 
-    # The same stream through a sharded partition layer: the engine routes
-    # each batch through per-shard summary bitmaps and reduces counts.
+    # The same stream through a sharded partition layer with the routed
+    # dense dispatch: the engine routes each batch through per-shard summary
+    # bitmaps and reduces counts (mode="dense" + sharded=True).
     t2 = PagedTable.from_values(values, page_card=page_card)
     sidx = ShardedHippoIndex.create(t2, num_shards=4, resolution=400, density=0.2)
-    sharded = QueryEngine(sidx, batch=64)
+    sharded = QueryEngine(sidx, batch=64, sharded=True)
     # warm every dispatch-width trace the stream will use (steady state)
-    QueryEngine(sidx, batch=64).run_all(preds)
+    QueryEngine(sidx, batch=64, sharded=True).run_all(preds)
     t0 = time.perf_counter()
     shard_counts = sharded.run_all(preds)
     dt_shard = time.perf_counter() - t0
@@ -78,6 +81,33 @@ def main():
           f"({len(preds)/dt_shard:.0f} q/s) — {ss.shard_dispatches} shard "
           f"dispatches, {ss.shards_pruned} pruned; occupancy {occ}")
     assert (shard_counts == loop_counts).all(), "sharded engine must be exact"
+
+    # The default (compact) mode serves the same stream off the gathered
+    # union-of-selected-pages slab — work proportional to what the batch
+    # selects (see bench_selectivity_sweep for the workload where that wins
+    # big; this broad mixed stream is its worst case and stays near parity).
+    compact = QueryEngine(sidx, batch=64)
+    compact.run_all(preds)                 # warm the traces + slab bucket
+    t0 = time.perf_counter()
+    compact_counts = compact.run_all(preds)
+    dt_compact = time.perf_counter() - t0
+    cs = compact.stats
+    assert (compact_counts == loop_counts).all(), "compact engine must be exact"
+    print(f"compact: {len(preds)} queries in {dt_compact*1e3:.1f} ms "
+          f"({len(preds)/dt_compact:.0f} q/s) — selected-page ratio "
+          f"{cs.selected_page_ratio:.0%}, gather occupancy "
+          f"{cs.gather_occupancy:.0%}, {cs.compact_fallbacks} dense fallbacks")
+
+    # With top_k set, tickets also carry qualifying global row ids.
+    ids_engine = QueryEngine(sidx, batch=8, top_k=8)
+    ticket = ids_engine.submit(preds[0])
+    ids_engine.drain()
+    vals = sidx.table.row_values(ticket.row_ids)
+    lo, hi = ticket.pred.selectivity_interval()
+    assert ((vals >= lo) & (vals <= hi)).all()
+    print(f"compact: ticket qid={ticket.qid} carries {len(ticket.row_ids)} "
+          f"row ids of its {ticket.count} matches, e.g. "
+          f"{[int(i) for i in ticket.row_ids[:3]]} -> {np.round(vals[:3], 1)}")
 
     # Mixed read/write serving: writes go through the engine's async
     # maintenance writer instead of running Algorithm 3 on the query path.

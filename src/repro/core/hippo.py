@@ -112,6 +112,29 @@ class HippoIndex:
                                   self.table.device_valid(), los[0], his[0],
                                   max_selected=max_selected)
 
+    def search_compact_batch(self, preds: list[Predicate], *,
+                             max_selected: int, top_k: int = 0
+                             ) -> hix.CompactBatchResult:
+        """Batched gather path: union the batch's page masks, gather once,
+        inspect every predicate against the shared slab
+        (``core.index.search_compact_many``). Counts are bit-identical to
+        ``search_batch`` for rows whose ``truncated`` flag is clear; with
+        ``top_k`` set, rows carry qualifying global row ids
+        (``page_id * page_card + slot``, decode via
+        ``PagedTable.row_values``)."""
+        qbms = to_bucket_bitmaps(preds, self.state.histogram)
+        los, his = intervals(preds)
+        return hix.search_compact_many(
+            self.state, qbms, self.table.device_keys(),
+            self.table.device_valid(), los, his,
+            max_selected=max_selected, top_k=top_k)
+
+    @property
+    def gather_cap(self) -> int:
+        """Slab width at which the gather path can never truncate (the
+        compact engine mode's dense-fallback ``max_selected``)."""
+        return max(self.table.num_pages, 1)
+
     # -- maintenance -----------------------------------------------------------
 
     def _require_slot_capacity(self, needed: int = 1) -> None:

@@ -89,6 +89,35 @@ class BatchSearchResult(NamedTuple):
     entries_matched: jnp.ndarray  # (Q,) i32
 
 
+class CompactBatchResult(NamedTuple):
+    """Per-query results of the batched gather path (``search_compact_many``).
+
+    Work after the bitmap filter is proportional to ``max_selected`` gathered
+    pages, not to the table — the paper's "read only possible qualified
+    pages" cost model on an accelerator. ``truncated`` is exact per query: it
+    fires iff one of *that query's* selected pages fell outside the gathered
+    slab, in which case ``counts[q]``/``row_ids[q]`` are lower bounds and the
+    caller must fall back to a wider slab or the dense path.
+    ``pages_inspected``/``entries_matched`` are computed before the gather,
+    so they are exact even for truncated rows.
+    """
+    counts: jnp.ndarray           # (Q,) i32
+    pages_inspected: jnp.ndarray  # (Q,) i32 — possible qualified pages (exact)
+    entries_matched: jnp.ndarray  # (Q,) i32
+    truncated: jnp.ndarray        # (Q,) bool — slab missed >=1 of q's pages
+    bucket_needed: jnp.ndarray    # i32 scalar — slab size that avoids any
+    #                               truncation (max per-shard union of the
+    #                               batch's page masks); drives adaptive
+    #                               max_selected bucketing upstream
+    pages_selected: jnp.ndarray   # i32 scalar — distinct pages selected by
+    #                               the whole batch (summed over shards)
+    pages_gathered: jnp.ndarray   # i32 scalar — selected pages that fit the
+    #                               slab, min(union, max_selected) per shard
+    #                               summed (gather-occupancy numerator)
+    row_ids: jnp.ndarray          # (Q, top_k) i32 global row ids in ascending
+    #                               order, -1 padded; (Q, 0) when top_k == 0
+
+
 # ---------------------------------------------------------------------------
 # Build (§4, Algorithm 2)
 # ---------------------------------------------------------------------------
@@ -328,7 +357,14 @@ def search_compact(state: HippoState, query_bitmap: jnp.ndarray, keys: jnp.ndarr
     Returns (count, pages_inspected, truncated); if ``truncated`` is true the
     selection overflowed ``max_selected`` and the caller must fall back to the
     dense path (the count would otherwise be incomplete).
+
+    Fill-value contract: the selection pads with ``fill_value=num_pages`` and
+    the gathers run with ``mode="fill"``, so pad rows contribute nothing; a
+    ``max_selected`` of zero would make every row a pad and silently count 0,
+    so it is rejected here (static arg => plain raise at trace time).
     """
+    if max_selected < 1:
+        raise ValueError(f"max_selected must be >= 1, got {max_selected}")
     num_pages = keys.shape[0]
     s = state.bitmaps.shape[0]
     live = state.slot_live & (jnp.arange(s) < state.num_slots)
@@ -341,6 +377,162 @@ def search_compact(state: HippoState, query_bitmap: jnp.ndarray, keys: jnp.ndarr
     pv = valid.at[sel].get(mode="fill", fill_value=False) & in_range[:, None]
     qual = pv & (pk.astype(jnp.float32) >= lo) & (pk.astype(jnp.float32) <= hi)
     return qual.sum(dtype=jnp.int32), n_sel, n_sel > max_selected
+
+
+@partial(jax.jit, static_argnames=("max_selected", "top_k"))
+def search_compact_many(state: HippoState, query_bitmaps: jnp.ndarray,
+                        keys: jnp.ndarray, valid: jnp.ndarray,
+                        los: jnp.ndarray, his: jnp.ndarray, *,
+                        max_selected: int, top_k: int = 0
+                        ) -> CompactBatchResult:
+    """Batched gather-then-inspect: Q predicates over one shared page slab.
+
+    The per-query page masks of Algorithm 1 step 2 are unioned, the union's
+    pages are gathered **once** into a ``(max_selected, C)`` slab, and every
+    query's interval test runs against that shared slab — so inspect cost is
+    O(Q x max_selected x C) instead of ``search_many``'s O(Q x P x C),
+    i.e. proportional to the batch's selectivity, not the table.
+
+    Row q's ``counts`` is bit-identical to ``search_many`` whenever
+    ``truncated[q]`` is False (pages are gathered in ascending page order and
+    inspection is exact). With ``top_k > 0``, ``row_ids[q]`` carries the
+    first ``top_k`` qualifying global row ids (``page_id * C + slot``) in
+    ascending order, -1 padded; when ``counts[q] > top_k`` the id list is a
+    prefix (callers see the shortfall from the count itself).
+
+    The fill-value contract of ``search_compact`` applies: selection pads
+    with ``num_pages`` and gathers with ``mode="fill"``, so pad rows can
+    never qualify; ``max_selected`` must be >= 1.
+    """
+    if max_selected < 1:
+        raise ValueError(f"max_selected must be >= 1, got {max_selected}")
+    if top_k < 0:
+        raise ValueError(f"top_k must be >= 0, got {top_k}")
+    num_pages, card = keys.shape
+    s = state.bitmaps.shape[0]
+    live = state.slot_live & (jnp.arange(s) < state.num_slots)
+    # Step 2, batched: joint-bucket test + page-range expansion per query.
+    match = bm.any_joint(query_bitmaps[:, None, :], state.bitmaps[None, :, :])
+    match = match & live[None, :]                                   # (Q, S)
+    page_mask = _expand_page_mask(state, match, num_pages)          # (Q, P)
+    # Union across the batch: one gather serves every query's inspection.
+    union = jnp.any(page_mask, axis=0)                              # (P,)
+    n_union = union.sum(dtype=jnp.int32)
+    sel = jnp.nonzero(union, size=max_selected, fill_value=num_pages)[0]
+    in_range = sel < num_pages                                      # (M,)
+    slab_keys = jnp.where(in_range[:, None],
+                          keys.at[sel].get(mode="fill", fill_value=0.0), 0.0)
+    slab_valid = valid.at[sel].get(mode="fill", fill_value=False) & in_range[:, None]
+    # Each query's mask restricted to the gathered slab (filter-match half of
+    # the fused inspect; kernels/compact_inspect is the Pallas twin).
+    sel_mask = (page_mask.at[:, sel].get(mode="fill", fill_value=False)
+                & in_range[None, :])                                # (Q, M)
+    v = slab_keys.astype(jnp.float32)[None]
+    qual = (sel_mask[:, :, None] & slab_valid[None]
+            & (v >= los[:, None, None]) & (v <= his[:, None, None]))
+    pages_inspected = page_mask.sum(axis=1, dtype=jnp.int32)
+    covered = sel_mask.sum(axis=1, dtype=jnp.int32)
+    if top_k:
+        # First top_k qualifying rows per query, in slab order == ascending
+        # global row id order (sel is ascending, slots are row-ordered).
+        flat = qual.reshape(qual.shape[0], -1)                      # (Q, M*C)
+        gids = (sel[:, None] * card
+                + jnp.arange(card, dtype=jnp.int32)[None, :]).reshape(-1)
+        npos = flat.shape[1]
+        pos = jnp.where(flat, jnp.arange(npos, dtype=jnp.int32)[None, :], npos)
+        k_eff = min(top_k, npos)   # a slab of M*C rows can yield at most M*C ids
+        # smallest k_eff positions per row in ascending order: top_k of the
+        # negated positions selects them at O(n log k) instead of a full sort
+        first = -jax.lax.top_k(-pos, k_eff)[0]                      # (Q, K)
+        row_ids = jnp.where(first < npos,
+                            gids.at[first].get(mode="fill", fill_value=-1), -1)
+        if k_eff < top_k:
+            row_ids = jnp.pad(row_ids, ((0, 0), (0, top_k - k_eff)),
+                              constant_values=-1)
+    else:
+        row_ids = jnp.zeros((qual.shape[0], 0), jnp.int32)
+    return CompactBatchResult(
+        counts=qual.sum(axis=(1, 2), dtype=jnp.int32),
+        pages_inspected=pages_inspected,
+        entries_matched=match.sum(axis=1, dtype=jnp.int32),
+        truncated=covered < pages_inspected,
+        bucket_needed=n_union,
+        pages_selected=n_union,
+        pages_gathered=jnp.minimum(n_union, max_selected),
+        row_ids=row_ids,
+    )
+
+
+_I32_PAD = jnp.int32(_INT32_MAX)
+
+
+@partial(jax.jit, static_argnames=("max_selected", "top_k"))
+def search_compact_many_sharded(shards: HippoState, query_bitmaps: jnp.ndarray,
+                                keys: jnp.ndarray, valid: jnp.ndarray,
+                                los: jnp.ndarray, his: jnp.ndarray, *,
+                                max_selected: int, top_k: int = 0
+                                ) -> CompactBatchResult:
+    """``search_compact_many`` over S shards, count-reduced like
+    ``search_many_sharded``.
+
+    ``max_selected`` is the *per-shard* slab size (each shard gathers its own
+    union). Counts/pages_inspected/entries_matched sum over the shard axis —
+    bit-identical to the unsharded gather over the same pages wherever no
+    shard truncated; ``truncated`` ORs over shards per query, and
+    ``bucket_needed`` is the max per-shard union (the slab size that would
+    clear every flag). Shard-local row ids globalize by the slab offset
+    (shard s's local row r is global ``s * PPS * C + r``) and merge by an
+    ascending sort, so ``row_ids`` equals the unsharded result's.
+    """
+    fn = partial(search_compact_many, max_selected=max_selected, top_k=top_k)
+    per = jax.vmap(fn, in_axes=(SHARD_AXES, None, 0, 0, None, None))(
+        shards, query_bitmaps, keys, valid, los, his)
+    if top_k:
+        s, _, card = keys.shape
+        offs = (jnp.arange(s, dtype=jnp.int32) * keys.shape[1] * card)
+        gids = jnp.where(per.row_ids >= 0,
+                         per.row_ids + offs[:, None, None], _I32_PAD)
+        q = gids.shape[1]
+        merged = jnp.moveaxis(gids, 0, 1).reshape(q, -1)      # (Q, S*K)
+        merged = jax.lax.sort(merged, dimension=1)[:, :top_k]
+        row_ids = jnp.where(merged < _I32_PAD, merged, -1)
+    else:
+        row_ids = per.row_ids[0]
+    return CompactBatchResult(
+        counts=per.counts.sum(axis=0),                 # psum over shards
+        pages_inspected=per.pages_inspected.sum(axis=0),
+        entries_matched=per.entries_matched.sum(axis=0),
+        truncated=jnp.any(per.truncated, axis=0),
+        bucket_needed=per.bucket_needed.max(),
+        pages_selected=per.pages_selected.sum(),
+        pages_gathered=per.pages_gathered.sum(),
+        row_ids=row_ids,
+    )
+
+
+def search_compact_many_sharded_staged(shards: HippoState,
+                                       query_bitmaps: jnp.ndarray,
+                                       keys: jnp.ndarray, valid: jnp.ndarray,
+                                       los: jnp.ndarray, his: jnp.ndarray,
+                                       staged_vals: jnp.ndarray,
+                                       staged_live: jnp.ndarray, *,
+                                       max_selected: int, top_k: int = 0
+                                       ) -> CompactBatchResult:
+    """``search_compact_many_sharded`` plus the staging-buffer overlay.
+
+    The compact twin of ``search_many_sharded_staged``: counts gain the
+    staged rows matching each predicate, so the gather path never goes stale
+    while inserts wait in the writer's queues. Staged rows occupy no page
+    until their drain, so they appear in ``counts`` only — never in
+    ``row_ids``/``pages_inspected`` (exactly as the dense path keeps them out
+    of ``page_mask``) — and they cannot cause truncation.
+    """
+    res = search_compact_many_sharded(shards, query_bitmaps, keys, valid,
+                                      los, his, max_selected=max_selected,
+                                      top_k=top_k)
+    return res._replace(
+        counts=res.counts + staged_overlay_counts(staged_vals, staged_live,
+                                                  los, his))
 
 
 # ---------------------------------------------------------------------------

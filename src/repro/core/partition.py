@@ -256,6 +256,37 @@ class ShardedHippoIndex:
                                           los, his)
         return res._replace(page_mask=res.page_mask[:, : self.table.num_pages])
 
+    def search_compact_batch(self, preds: list[Predicate], *,
+                             max_selected: int, top_k: int = 0
+                             ) -> hix.CompactBatchResult:
+        """Batched gather path over every shard in one device program
+        (``core.index.search_compact_many_sharded``): each shard gathers its
+        own (``max_selected``, C) slab of the batch union and inspects every
+        predicate against it, counts reduced across the shard axis. With a
+        writer attached, the staging-buffer overlay folds into counts exactly
+        as on the dense path (never-stale contract); staged rows occupy no
+        page yet, so they appear in counts only, never in row ids, and cannot
+        truncate. Row ids are global (``page_id * page_card + slot``) and
+        bit-identical to the unsharded gather."""
+        self._check_swap_guard()
+        qbms = to_bucket_bitmaps(preds, self.histogram)
+        los, his = intervals(preds)
+        keys, valid = self._slabs()
+        if self.staging is not None and self.staging.staged_rows:
+            vals, live = self.staging.device_buffers()
+            return hix.search_compact_many_sharded_staged(
+                self.state.shards, qbms, keys, valid, los, his, vals, live,
+                max_selected=max_selected, top_k=top_k)
+        return hix.search_compact_many_sharded(
+            self.state.shards, qbms, keys, valid, los, his,
+            max_selected=max_selected, top_k=top_k)
+
+    @property
+    def gather_cap(self) -> int:
+        """Per-shard slab width at which the gather path can never truncate
+        (a shard's union is at most its ``pages_per_shard`` slab pages)."""
+        return self.spec.pages_per_shard
+
     def search_batch_shard(self, s: int, preds: list[Predicate]
                            ) -> hix.BatchSearchResult:
         """Algorithm 1 over one shard's slab only (list-of-predicates form).

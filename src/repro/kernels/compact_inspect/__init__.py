@@ -1,0 +1,1 @@
+from repro.kernels.compact_inspect.ops import compact_inspect  # noqa: F401

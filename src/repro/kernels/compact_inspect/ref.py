@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the compact_inspect kernel."""
+import jax.numpy as jnp
+
+
+def compact_inspect_ref(keys: jnp.ndarray, valid: jnp.ndarray,
+                        sel_mask: jnp.ndarray, los, his) -> jnp.ndarray:
+    """keys: (M, C) f32 gathered slab; valid: (M, C) bool; sel_mask: (Q, M)
+    bool; los/his: (Q,) f32. Returns counts (Q, M) int32."""
+    k = keys.astype(jnp.float32)[None]                  # (1, M, C)
+    los = jnp.asarray(los, jnp.float32)
+    his = jnp.asarray(his, jnp.float32)
+    qual = (sel_mask[:, :, None] & valid[None]
+            & (k >= los[:, None, None]) & (k <= his[:, None, None]))
+    return qual.sum(axis=2, dtype=jnp.int32)

@@ -18,22 +18,54 @@ the query analogue of a recycled decode slot idling on a pad token. Pads are
 tracked separately (``EngineStats.pad_slots``) and never counted as served
 work; ``EngineStats.occupancy`` is real queries over dispatched slots.
 
-Sharded mode (``core.partition.ShardedHippoIndex``): the admitted batch is
+Execution modes (``mode``): the default ``compact`` mode runs the batch
+through the gather path (``search_compact_batch``): the per-query page masks
+are unioned, the union's pages gathered once into a shared slab of
+``max_selected`` pages, and every query inspected against that slab — so
+inspect cost tracks the batch's selectivity, not the table size. The mode
+ladder keeps it exact and trace-stable:
+
+  compact    run at the current slab bucket (a power of two, adapted from
+             the batches seen so far, so traces are reused)
+  widen      a batch whose union overflows the bucket raises the bucket to
+             the next power of two (capped at the width that can never
+             truncate) for subsequent batches
+  fallback   queries whose own pages overflowed *this* batch's slab
+             (per-query ``truncated`` flag) re-run at the never-truncating
+             cap — dense-cost, still row-id-capable — so results are always
+             bit-identical to dense mode, never silently short
+
+Compact serving stats land in ``EngineStats``: ``compact_hits`` /
+``compact_fallbacks``, ``gather_occupancy`` (union pages over slab capacity
+dispatched), and ``selected_page_ratio`` (union pages over table pages —
+the fraction of the table the batch actually touched). With ``top_k`` set,
+tickets additionally carry the first ``top_k`` qualifying global row ids
+(``row_ids``; decode via ``PagedTable.row_values``).
+
+``mode="dense"`` is the previous full-table behavior: one (Q, P, C) program
+(or, with ``sharded=True``, the summary-routed per-shard dispatch below).
+
+Sharded routed dispatch (``mode="dense"`` + ``sharded=True`` on a
+``core.partition.ShardedHippoIndex``): the admitted batch is
 routed through the per-shard summary bitmaps — a (batch, S) joint-bucket
 test — and each shard receives one dispatch carrying only the queries whose
 summaries match it, padded to a small bucket width so every shard reuses the
 same compiled traces. Shards no admitted query can match are skipped
 entirely (partition pruning), and per-query counts are reduced across the
 dispatched shards on the way out. Per-shard occupancy lands in
-``EngineStats.shard_queries`` / ``shard_slots``.
+``EngineStats.shard_queries`` / ``shard_slots``. In compact mode a sharded
+index instead runs the fused sharded gather (every shard gathers its own
+slab of the batch union; counts reduce across the shard axis), and the
+writer's staging overlay folds into counts on either path.
 
 Shapes/dtypes on the dispatch boundary: predicates convert once per batch to
 (Q, W) uint32 packed bucket bitmaps plus (Q,) float32 interval bounds; dense
 mode runs one (Q=batch)-wide program, sharded mode runs per-shard programs at
-bucketed widths. Equivalence contract: for the same predicate stream, dense
-mode on ``HippoIndex``, dense mode on ``ShardedHippoIndex`` (fused (Q, S)
-count-reduce), and the summary-routed sharded dispatch all return
-bit-identical counts.
+bucketed widths, compact mode one (Q=batch, max_selected)-slab program.
+Equivalence contract: for the same predicate stream, dense mode on
+``HippoIndex``, dense mode on ``ShardedHippoIndex`` (fused (Q, S)
+count-reduce), the summary-routed sharded dispatch, and compact mode on
+either index all return bit-identical counts.
 
 Writes (``runtime.writer.MaintenanceWriter``): ``write()``/``delete()``
 stage maintenance instead of running Algorithm 3 on the query path; staged
@@ -52,6 +84,7 @@ Queue depth, staged rows, and drain latency land in ``EngineStats``.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -61,17 +94,32 @@ from repro.runtime.writer import MaintenanceWriter
 
 _EMPTY = Predicate(lo=1.0, hi=0.0)   # lo > hi: matches nothing
 
-_SHARD_BUCKET_MIN = 8   # smallest per-shard dispatch width (trace bucketing)
+
+def _pow2_at_least(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+_SHARD_BUCKET_MIN = 8     # smallest per-shard dispatch width (trace bucketing)
+_COMPACT_BUCKET_MIN = 64  # smallest gather-slab width (trace bucketing)
+_FALLBACK_Q_MIN = 8       # smallest dense-fallback query width
 
 
 @dataclass
 class QueryTicket:
-    """One submitted predicate and, once its batch ran, its results."""
+    """One submitted predicate and, once its batch ran, its results.
+
+    ``row_ids`` is filled only by the compact mode with ``top_k`` set: the
+    first ``top_k`` qualifying global row ids in ascending order (pads
+    stripped; ``count`` tells the caller whether the list is a prefix).
+    """
     qid: int
     pred: Predicate
     count: int | None = None
     pages_inspected: int | None = None
     entries_matched: int | None = None
+    row_ids: np.ndarray | None = None
     done: bool = False
 
 
@@ -86,6 +134,14 @@ class EngineStats:
     shards_pruned: int = 0             # shard dispatches skipped via summaries
     shard_queries: dict = field(default_factory=dict)  # shard -> real queries
     shard_slots: dict = field(default_factory=dict)    # shard -> slots incl. pads
+    # -- compact mode (gather path) ------------------------------------------
+    compact_batches: int = 0     # batches executed through the gather path
+    compact_hits: int = 0        # queries served off the gathered slab
+    compact_fallbacks: int = 0   # truncated queries re-run at the dense cap
+    gather_union_pages: int = 0  # batch-union pages gathered into slabs, cum.
+    gather_slab_pages: int = 0   # slab capacity dispatched, cumulative
+    selected_pages: int = 0      # batch-union pages selected (unclamped), cum.
+    table_pages_seen: int = 0    # table pages visible per compact batch, cum.
     # -- async maintenance (runtime.writer) ----------------------------------
     writes: int = 0          # tuples written through the engine
     deletes: int = 0         # tuples deleted through the engine (incl. staged kills)
@@ -112,16 +168,52 @@ class EngineStats:
         return {s: self.shard_queries[s] / self.shard_slots[s]
                 for s in sorted(self.shard_slots) if self.shard_slots[s]}
 
+    @property
+    def gather_occupancy(self) -> float:
+        """Fraction of dispatched gather-slab capacity holding a selected
+        page (compact mode). Low occupancy means the adaptive bucket is
+        oversized for the workload; 1.0 means batches run at the edge of
+        their bucket."""
+        return (self.gather_union_pages / self.gather_slab_pages
+                if self.gather_slab_pages else 0.0)
+
+    @property
+    def selected_page_ratio(self) -> float:
+        """Batch-union pages over table pages across compact batches — the
+        fraction of the table the batches selected (the dense path's
+        denominator is always 1.0). Uses the unclamped union, so a
+        truncating batch reports what it *selected*, not the slab-capped
+        subset it managed to gather (that is ``gather_occupancy``'s job)."""
+        return (self.selected_pages / self.table_pages_seen
+                if self.table_pages_seen else 0.0)
+
 
 _DRAIN_POLICIES = ("sync", "between_batches", "on_depth", "manual")
+
+_MODES = ("auto", "compact", "dense")
 
 
 class QueryEngine:
     """Lock-step batched query executor with slot recycling.
 
-    ``sharded`` selects the per-shard dispatch path; by default it turns on
-    whenever the index exposes the partition-layer routing surface
-    (``plan_batch`` / ``search_batch_shard_arrays``).
+    ``mode`` selects the execution path (see module docstring): ``compact``
+    (the default via ``auto``) serves batches off the gathered
+    union-of-selected-pages slab with adaptive power-of-two bucketing and a
+    per-query dense fallback on truncation; ``dense`` is the full-table
+    path. ``auto`` resolves to ``dense`` when ``sharded=True`` is requested
+    explicitly (routed dispatch is a dense-mode feature) and to ``compact``
+    otherwise.
+
+    ``sharded`` selects the summary-routed per-shard dispatch of dense mode;
+    under ``mode="dense"`` it defaults on whenever the index exposes the
+    partition-layer routing surface (``plan_batch`` /
+    ``search_batch_shard_arrays``). Compact mode on a sharded index runs the
+    fused sharded gather instead.
+
+    ``top_k`` (compact mode only) makes every ticket carry up to ``top_k``
+    qualifying global row ids; ``compact_bucket`` seeds the adaptive slab
+    bucket (rounded up to a power of two, adapted upward as batches reveal
+    their union sizes).
 
     ``drain_policy`` selects the maintenance interleave (see module
     docstring); the default is ``between_batches`` when the index supports a
@@ -133,17 +225,47 @@ class QueryEngine:
     def __init__(self, index, batch: int = 64, sharded: bool | None = None,
                  drain_policy: str | None = None, drain_units: int = 1,
                  drain_depth: int = 256,
-                 writer: MaintenanceWriter | None = None):
+                 writer: MaintenanceWriter | None = None,
+                 mode: str = "auto", top_k: int = 0,
+                 compact_bucket: int | None = None):
         if batch < 1:
             raise ValueError(f"batch must be >= 1, got {batch}")
         self.index = index
         self.batch = batch
-        if sharded is None:
-            sharded = hasattr(index, "plan_batch")
-        if sharded and not hasattr(index, "plan_batch"):
-            raise ValueError("sharded=True needs a ShardedHippoIndex-style "
-                             "index (plan_batch/search_batch_shard_arrays)")
+        if mode not in _MODES:
+            raise ValueError(f"mode must be one of {_MODES}, got {mode!r}")
+        if mode == "auto":
+            mode = "dense" if sharded is True else "compact"
+        if mode == "compact":
+            if sharded is True:
+                raise ValueError(
+                    "sharded=True selects dense mode's routed dispatch; "
+                    "compact mode runs the fused sharded gather — pass "
+                    "mode='dense' for routing or drop sharded=True")
+            if not hasattr(index, "search_compact_batch"):
+                raise ValueError(
+                    "mode='compact' needs an index with the gather surface "
+                    "(search_compact_batch/gather_cap); got "
+                    f"{type(index).__name__}")
+            sharded = False
+        else:
+            if sharded is None:
+                sharded = hasattr(index, "plan_batch")
+            if sharded and not hasattr(index, "plan_batch"):
+                raise ValueError("sharded=True needs a ShardedHippoIndex-style "
+                                 "index (plan_batch/search_batch_shard_arrays)")
+        self.mode = mode
         self.sharded = sharded
+        if top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {top_k}")
+        if top_k and mode != "compact":
+            raise ValueError("row-id payloads (top_k > 0) ride the gather "
+                             "path; they need mode='compact'")
+        self.top_k = top_k
+        if compact_bucket is not None and compact_bucket < 1:
+            raise ValueError(f"compact_bucket must be >= 1, got {compact_bucket}")
+        self._compact_bucket = _pow2_at_least(compact_bucket
+                                              or _COMPACT_BUCKET_MIN)
         supports_writer = hasattr(index, "plan_batch")
         if drain_policy is None:
             drain_policy = "between_batches" if supports_writer else "sync"
@@ -166,7 +288,7 @@ class QueryEngine:
             writer = MaintenanceWriter(index)
         self.writer = writer
         self.slots: list[QueryTicket | None] = [None] * batch
-        self.queue: list[QueryTicket] = []
+        self.queue: deque[QueryTicket] = deque()
         self.stats = EngineStats()
         self._next_qid = 0
         self._auto_drain_suspended = False
@@ -174,7 +296,11 @@ class QueryEngine:
     # -- admission (mirrors BatchServer.admit) -------------------------------
 
     def submit(self, pred: Predicate) -> QueryTicket:
-        """Enqueue a predicate; returns its ticket (filled in by run_batch)."""
+        """Enqueue a predicate; returns its ticket (filled in by run_batch).
+
+        The queue is a deque and admission pops from its head while slot ids
+        come off a free list, so a deep backlog admits in O(1) per query —
+        a 100k-query burst no longer pays the O(n^2) of ``list.pop(0)``."""
         t = QueryTicket(qid=self._next_qid, pred=pred)
         self._next_qid += 1
         self.stats.submitted += 1
@@ -182,9 +308,16 @@ class QueryEngine:
         return t
 
     def _admit(self) -> None:
-        for i in range(self.batch):
-            if self.slots[i] is None and self.queue:
-                self.slots[i] = self.queue.pop(0)
+        if not self.queue:
+            return
+        # the free-slot list is rebuilt from the slots each round (O(batch),
+        # paid once per batch, and immune to external slot resets — the
+        # documented way to discard admitted work); each admission is then
+        # one O(1) popleft, so a deep backlog admits in O(1) per query
+        for i in (i for i, t in enumerate(self.slots) if t is None):
+            if not self.queue:
+                break
+            self.slots[i] = self.queue.popleft()
 
     # -- writes (async maintenance surface) ----------------------------------
 
@@ -259,7 +392,10 @@ class QueryEngine:
         active = [i for i, t in enumerate(self.slots) if t is not None]
         if not active:
             return []
-        if self.sharded:
+        row_ids = None
+        if self.mode == "compact":
+            counts, inspected, matched, row_ids = self._execute_compact(active)
+        elif self.sharded:
             counts, inspected, matched = self._execute_sharded(active)
         else:
             counts, inspected, matched = self._execute_dense(active)
@@ -269,13 +405,16 @@ class QueryEngine:
             t.count = int(counts[k])
             t.pages_inspected = int(inspected[k])
             t.entries_matched = int(matched[k])
+            if row_ids is not None:
+                ids = row_ids[k]
+                t.row_ids = ids[ids >= 0].copy()   # strip the -1 pads
             t.done = True
             finished.append(t)
             self.slots[i] = None          # recycle the slot
         self.stats.batches += 1
         if not self.sharded:
-            # dense mode dispatches the full batch width; sharded dispatch
-            # accounting happens per shard inside _execute_sharded
+            # compact and dense modes dispatch the full batch width; routed
+            # dispatch accounting happens per shard inside _execute_sharded
             self.stats.slots_filled += len(active)
             self.stats.pad_slots += self.batch - len(active)
         self.stats.served += len(finished)
@@ -305,6 +444,60 @@ class QueryEngine:
         matched = np.asarray(res.entries_matched)[active]
         return counts, inspected, matched
 
+    def _execute_compact(self, active: list[int]) -> tuple:
+        """The compact mode ladder: gather-path batch at the current slab
+        bucket, widen the bucket for future batches when the union overflows
+        it, and re-run this batch's truncated queries at the never-truncating
+        cap (dense cost, still exact and row-id-capable).
+
+        ``pages_inspected``/``entries_matched`` come from the first run even
+        for truncated rows (they are computed before the gather and exact
+        regardless); only counts and row ids are patched from the fallback.
+        """
+        preds = [t.pred if t is not None else _EMPTY for t in self.slots]
+        cap = self.index.gather_cap
+        bucket = min(self._compact_bucket, cap)   # never gather past the slab
+        res = self.index.search_compact_batch(preds, max_selected=bucket,
+                                              top_k=self.top_k)
+        counts = np.asarray(res.counts).copy()
+        inspected = np.asarray(res.pages_inspected)
+        matched = np.asarray(res.entries_matched)
+        trunc = np.asarray(res.truncated)
+        row_ids = np.asarray(res.row_ids).copy() if self.top_k else None
+        st = self.stats
+        st.compact_batches += 1
+        shards = getattr(self.index, "num_shards", 1)
+        st.gather_union_pages += int(res.pages_gathered)
+        st.gather_slab_pages += bucket * shards
+        st.selected_pages += int(res.pages_selected)
+        st.table_pages_seen += self.index.table.num_pages
+        needed = int(res.bucket_needed)
+        if needed > bucket:
+            # adapt: the next batch starts at a slab the last union fits
+            self._compact_bucket = min(_pow2_at_least(needed), cap)
+        bad = [i for i in active if trunc[i]]
+        if bad:
+            st.compact_fallbacks += len(bad)
+            width = _pow2_at_least(max(len(bad), _FALLBACK_Q_MIN))
+            fb_preds = [self.slots[i].pred for i in bad]
+            fb_preds += [_EMPTY] * (width - len(bad))
+            fb = self.index.search_compact_batch(fb_preds, max_selected=cap,
+                                                 top_k=self.top_k)
+            if bool(np.asarray(fb.truncated)[: len(bad)].any()):
+                raise RuntimeError(
+                    "compact fallback truncated at the full gather cap — "
+                    "the slab no longer covers the table (was the index "
+                    "mutated mid-batch?)")
+            fb_counts = np.asarray(fb.counts)
+            fb_ids = np.asarray(fb.row_ids) if row_ids is not None else None
+            for k, i in enumerate(bad):
+                counts[i] = fb_counts[k]
+                if row_ids is not None:
+                    row_ids[i] = fb_ids[k]
+        st.compact_hits += len(active) - len(bad)
+        return (counts[active], inspected[active], matched[active],
+                row_ids[active] if row_ids is not None else None)
+
     def _execute_sharded(self, active: list[int]) -> tuple:
         """Per-shard dispatch with summary pruning and count-reduce.
 
@@ -328,9 +521,7 @@ class QueryEngine:
             if hit.size == 0:
                 self.stats.shards_pruned += 1
                 continue
-            width = _SHARD_BUCKET_MIN
-            while width < hit.size:
-                width *= 2
+            width = _pow2_at_least(max(int(hit.size), _SHARD_BUCKET_MIN))
             qb = np.zeros((width, qbms.shape[1]), qbms.dtype)
             qb[: hit.size] = qbms[hit]
             lo = np.full((width,), _EMPTY.lo, np.float32)

@@ -15,9 +15,12 @@ Lifecycle (per shard):
            owning shard's pending queue — a small staging buffer kept in
            table-append order, with a sorted view for overlay counting.
            Nothing touches the device index; staging is a host list append.
-  overlay  queries stay exact while rows wait: ``search_batch`` (and the
-           engine's routed dispatch) add the staged rows matching each
-           predicate on top of the index counts — the never-stale contract.
+  overlay  queries stay exact while rows wait: ``search_batch``, the compact
+           gather path (``search_compact_batch``), and the engine's routed
+           dispatch all add the staged rows matching each predicate on top
+           of the index counts — the never-stale contract. Staged rows
+           occupy no page until their drain, so they appear in counts only,
+           never in the compact path's row ids (nor in ``page_mask``).
            ``delete(lo, hi)`` marks table tuples invalid immediately (queries
            read the validity mask, §5.2 lazy deletes) and kills staged rows
            in range before they ever reach the table.

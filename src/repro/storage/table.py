@@ -83,6 +83,27 @@ class PagedTable:
         """Bytes of live table storage (key column only, paper's table size)."""
         return self.num_pages * self.page_card * 4
 
+    # -- row-id decoding (compact-path result payloads) ----------------------
+
+    def row_values(self, row_ids: np.ndarray, payload: str | None = None
+                   ) -> np.ndarray:
+        """Fetch key (or payload-column) values for global row ids.
+
+        A global row id is ``page_id * page_card + slot`` — the coordinate
+        the gather path's ``row_ids`` results use
+        (``core.index.search_compact_many``). Negative ids (the -1 pads of a
+        ``top_k`` result) are skipped, so a padded id row can be passed
+        straight through. Raises on ids past the table's tuple capacity.
+        """
+        ids = np.asarray(row_ids).ravel()
+        ids = ids[ids >= 0]
+        if ids.size and int(ids.max()) >= self.num_pages * self.page_card:
+            raise IndexError(
+                f"row id {int(ids.max())} past the table's "
+                f"{self.num_pages * self.page_card} tuple slots")
+        col = self.keys if payload is None else self.payload[payload]
+        return col.reshape(-1)[ids]
+
     # -- device views --------------------------------------------------------
 
     def _device_views(self, n: int) -> tuple:

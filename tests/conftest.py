@@ -1,16 +1,20 @@
 """Shared pytest configuration: test tiers.
 
 Tier-1 (everything): ``PYTHONPATH=src python -m pytest -x -q``
-Fast inner loop:     ``PYTHONPATH=src python -m pytest -x -q -m "not slow and not shard and not writer"``
+Fast inner loop:     ``PYTHONPATH=src python -m pytest -x -q -m "not slow and not shard and not writer and not compact"``
 Partition suite:     ``PYTHONPATH=src python -m pytest -x -q -m shard``
 Writer suite:        ``PYTHONPATH=src python -m pytest -x -q -m writer``
+Compact suite:       ``PYTHONPATH=src python -m pytest -x -q -m compact``
 
 ``slow`` marks the model/launch/system modules that compile transformer steps
 or fork subprocess meshes; ``shard`` marks the partition-layer suite (many
 distinct stacked-state jit shapes, so it compiles for ~40s); ``writer`` marks
 the async-maintenance suite (stacked-state + drain traces, similar compile
-cost). Excluding all three keeps the core index/kernel/maintenance inner
-loop well under a minute. The markers are documented in README.md.
+cost); ``compact`` marks the gather-path equivalence sweep
+(``tests/test_compact.py`` — selectivity x shard count x staged rows, many
+distinct (max_selected, top_k) trace shapes). Excluding all four keeps the
+core index/kernel/maintenance inner loop well under a minute. The markers
+are documented in README.md.
 """
 
 
@@ -29,3 +33,9 @@ def pytest_configure(config):
         "writer: async-maintenance tests (runtime.writer staged queues, "
         "drain/swap lifecycle, staleness refusal); compiles stacked-state "
         "traces like the shard suite — run just these with -m writer")
+    config.addinivalue_line(
+        "markers",
+        "compact: gather-path equivalence sweep (tests/test_compact.py — "
+        "compact vs dense vs sharded vs staged-overlay, bit-identical "
+        "counts/row ids wherever untruncated); compiles many "
+        "(max_selected, top_k) trace shapes — run just these with -m compact")

@@ -1,0 +1,66 @@
+"""Benchmark harness plumbing: the ``--json`` machine-readable output path.
+
+The benchmarks themselves are too slow for the test tier, so these tests
+drive ``benchmarks.run`` with a stub suite that emits canned rows and check
+the JSON document the repo's ``BENCH_*.json`` trajectory files accumulate.
+"""
+import json
+
+import pytest
+
+from benchmarks import common
+from benchmarks.run import SUITES, main, parse_derived, rows_to_json
+
+
+def test_parse_derived_coerces_numbers():
+    d = parse_derived("qps=123.5;speedup=2;label=hot;empty=")
+    assert d == {"qps": 123.5, "speedup": 2, "label": "hot", "empty": ""}
+    assert isinstance(d["speedup"], int)
+    assert parse_derived("") == {}
+
+
+def test_rows_to_json_groups_suites_and_parses_derived():
+    doc = rows_to_json(
+        {"alpha": [("alpha_a", 12.34, "qps=10;note=x")],
+         "beta": [("beta_b", 56.0, "")]},
+        quick=True)
+    assert doc["schema"] == 1 and doc["config"]["quick"] is True
+    assert set(doc["suites"]) == {"alpha", "beta"}
+    row = doc["suites"]["alpha"][0]
+    assert row["name"] == "alpha_a"
+    assert row["us_per_call"] == 12.3
+    assert row["qps"] == 10 and row["derived"] == {"qps": 10, "note": "x"}
+    assert doc["suites"]["beta"][0]["qps"] is None
+
+
+def test_main_writes_json_for_a_suite(tmp_path, monkeypatch, capsys):
+    def stub(quick):
+        common.emit("stub_metric", 42.0, qps=100.0, speedup=2.5)
+        common.emit("stub_other", 7.0)
+
+    monkeypatch.setitem(SUITES, "stub", stub)
+    out = tmp_path / "bench.json"
+    main(["--only", "stub", "--json", str(out)])
+    doc = json.loads(out.read_text())
+    assert list(doc["suites"]) == ["stub"]
+    rows = doc["suites"]["stub"]
+    assert [r["name"] for r in rows] == ["stub_metric", "stub_other"]
+    assert rows[0]["qps"] == 100.0
+    assert rows[0]["derived"]["speedup"] == 2.5
+    assert doc["config"]["quick"] is False
+    # the CSV contract on stdout is unchanged by --json
+    assert "stub_metric,42.0,qps=100.0;speedup=2.5" in capsys.readouterr().out
+
+
+def test_main_only_is_repeatable(monkeypatch):
+    calls = []
+    monkeypatch.setitem(SUITES, "stub1", lambda quick: calls.append("stub1"))
+    monkeypatch.setitem(SUITES, "stub2", lambda quick: calls.append("stub2"))
+    main(["--only", "stub1", "--only", "stub2"])
+    assert calls == ["stub1", "stub2"]
+
+
+def test_selectivity_sweep_is_registered():
+    assert "selectivity_sweep" in SUITES
+    with pytest.raises(SystemExit):
+        main(["--only", "not-a-suite"])

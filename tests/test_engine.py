@@ -132,3 +132,42 @@ def test_query_engine_results_in_submission_order():
     engine.drain()
     for t, p in zip(tickets, preds):
         assert t.count == int(idx.search(p).count)
+
+
+def test_admission_is_constant_time_per_query():
+    """The queue is a deque and slots come off a free list: admitting from a
+    deep backlog must not re-scan the queue (the old list.pop(0) was O(n)
+    per admit, O(n^2) per backlog). Guarded structurally — the queue type
+    popleft's in O(1) — and behaviorally: FIFO order survives slot recycling
+    and an external slot reset (the documented way to discard pending work)."""
+    from collections import deque
+    rng = np.random.default_rng(8)
+    idx = make_index(rng.uniform(0, 1000, 200))
+    engine = QueryEngine(idx, batch=4)
+    assert isinstance(engine.queue, deque)
+    tickets = [engine.submit(Predicate.between(i, i + 1.0)) for i in range(16)]
+    engine.run_batch()
+    assert [t.done for t in tickets[:4]] == [True] * 4      # FIFO head first
+    assert not any(t.done for t in tickets[4:])
+    # external slot reset (the writer suite's idiom for dropping admitted
+    # work): the free list must resync instead of stranding the slots
+    engine._admit()                        # tickets[4:8] occupy the slots
+    engine.slots = [None] * engine.batch   # ... and are dropped on the floor
+    engine.drain()
+    assert not any(t.done for t in tickets[4:8])   # dropped, never served
+    assert all(t.done for t in tickets[8:])        # the rest drain FIFO
+    assert engine.stats.served == 12
+
+
+def test_engine_compact_default_matches_explicit_dense():
+    rng = np.random.default_rng(9)
+    idx = make_index(np.sort(rng.uniform(0, 1000, 1500)))
+    preds = workload(rng, 12)
+    default = QueryEngine(idx, batch=8)
+    assert default.mode == "compact"
+    counts = default.run_all(preds)
+    np.testing.assert_array_equal(
+        counts, QueryEngine(idx, batch=8, mode="dense").run_all(preds))
+    assert default.stats.compact_batches == default.stats.batches
+    assert (default.stats.compact_hits + default.stats.compact_fallbacks
+            == default.stats.served)

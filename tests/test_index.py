@@ -107,6 +107,72 @@ def test_search_compact_truncation_flag_parity():
             assert int(count) == int(dense.count)
 
 
+def test_search_compact_fill_value_never_undercounts_silently():
+    """Regression for the gather fill-value hazard: selection pads with
+    ``fill_value=num_pages`` and gathers with ``mode="fill"``. A full-table
+    match that overflows ``max_selected`` must set ``truncated`` (so callers
+    fall back) — the pads themselves must never masquerade as real pages or
+    push the count below what the gathered slab actually holds."""
+    rng = np.random.default_rng(21)
+    values = rng.uniform(0, 100, 800)
+    idx = make_index(values)
+    full = Predicate.between(-1e30, 1e30)
+    n_sel = int(idx.search(full).pages_inspected)
+    assert n_sel == idx.table.num_pages          # full-table match
+    for cap in (1, 7, n_sel - 1):
+        count, inspected, truncated = idx.search_compact(full, max_selected=cap)
+        assert bool(truncated), cap
+        assert int(inspected) == n_sel, cap
+        # the slab holds exactly cap real pages => their tuples and no more
+        assert int(count) == int(np.sum(
+            idx.table.valid[:cap]
+            & (idx.table.keys[:cap] >= -3.4e38)
+            & (idx.table.keys[:cap] <= 3.4e38))), cap
+    # at exactly n_sel the flag clears and the count is exact
+    count, _, truncated = idx.search_compact(full, max_selected=n_sel)
+    assert not bool(truncated)
+    assert int(count) == idx.table.cardinality
+
+
+def test_search_compact_rejects_zero_capacity():
+    """max_selected=0 would turn every slab row into a pad and silently
+    count 0 — both gather entry points must refuse it outright."""
+    rng = np.random.default_rng(22)
+    idx = make_index(rng.uniform(0, 100, 200))
+    pred = Predicate.between(0, 50)
+    with pytest.raises(ValueError, match="max_selected"):
+        idx.search_compact(pred, max_selected=0)
+    with pytest.raises(ValueError, match="max_selected"):
+        idx.search_compact_batch([pred], max_selected=0)
+    with pytest.raises(ValueError, match="top_k"):
+        idx.search_compact_batch([pred], max_selected=4, top_k=-1)
+
+
+def test_search_compact_many_matches_search_many():
+    """Quick (unmarked) batched-gather parity check; the full selectivity x
+    shards x staged sweep lives in tests/test_compact.py (-m compact)."""
+    rng = np.random.default_rng(23)
+    idx = make_index(np.sort(rng.uniform(0, 100, 1000)))
+    preds = [Predicate.between(10, 12), Predicate.between(40, 80),
+             Predicate(lo=5.0, hi=1.0), Predicate.between(-1e30, 1e30)]
+    dense = idx.search_batch(preds)
+    res = idx.search_compact_batch(preds, max_selected=idx.table.num_pages,
+                                   top_k=8)
+    assert not np.asarray(res.truncated).any()
+    np.testing.assert_array_equal(np.asarray(res.counts),
+                                  np.asarray(dense.counts))
+    np.testing.assert_array_equal(np.asarray(res.pages_inspected),
+                                  np.asarray(dense.pages_inspected))
+    # row ids: first 8 qualifying rows of each predicate, ascending
+    keys = idx.table.keys[: idx.table.num_pages].reshape(-1)
+    valid = idx.table.valid[: idx.table.num_pages].reshape(-1)
+    for q, p in enumerate(preds):
+        lo, hi = max(p.lo, -3.4e38), min(p.hi, 3.4e38)
+        want = np.flatnonzero(valid & (keys >= lo) & (keys <= hi))[:8]
+        ids = np.asarray(res.row_ids[q])
+        np.testing.assert_array_equal(ids[ids >= 0], want, q)
+
+
 def test_false_positive_filtering_is_effective():
     # Sorted data => contiguous buckets per entry => small range predicates
     # should prune most pages (the paper's headline search behaviour).

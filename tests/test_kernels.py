@@ -10,6 +10,8 @@ from repro.kernels.batch_filter.ref import (batch_filter_ref,
                                             batch_filter_sharded_ref)
 from repro.kernels.bitmap_and.ops import bitmap_and_any
 from repro.kernels.bitmap_and.ref import bitmap_and_any_ref
+from repro.kernels.compact_inspect.ops import compact_inspect
+from repro.kernels.compact_inspect.ref import compact_inspect_ref
 from repro.kernels.bucketize.ops import bucketize_values
 from repro.kernels.bucketize.ref import bucketize_ref
 from repro.kernels.page_inspect.ops import page_inspect
@@ -176,6 +178,82 @@ def test_page_inspect_empty_interval():
     mask = jnp.ones((8,), bool)
     qual, counts = page_inspect(keys, valid, mask, 5.0, 4.0)
     assert int(counts.sum()) == 0 and not bool(qual.any())
+
+
+# ---------------------------------------------------------------------------
+# compact_inspect
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("queries,pages,card", [
+    (1, 1, 1),         # all dims below one tile
+    (5, 37, 50),       # all dims need padding
+    (8, 64, 128),      # exact tile multiples
+    (9, 65, 130),      # one past every tile boundary
+    (16, 200, 7),      # multiple tiles, narrow pages
+])
+def test_compact_inspect_shapes(queries, pages, card):
+    rng = np.random.default_rng(queries * 10000 + pages * 10 + card)
+    keys = rng.uniform(0, 100, (pages, card)).astype(np.float32)
+    valid = rng.random((pages, card)) < 0.9
+    sel = rng.random((queries, pages)) < 0.5
+    los = rng.uniform(0, 60, queries).astype(np.float32)
+    his = (los + rng.uniform(0, 40, queries)).astype(np.float32)
+    got = compact_inspect(jnp.asarray(keys), jnp.asarray(valid),
+                          jnp.asarray(sel), jnp.asarray(los), jnp.asarray(his))
+    want = compact_inspect_ref(jnp.asarray(keys), jnp.asarray(valid),
+                               jnp.asarray(sel), los, his)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_compact_inspect_empty_interval_and_mask():
+    keys = jnp.ones((8, 16), jnp.float32)
+    valid = jnp.ones((8, 16), bool)
+    sel = jnp.ones((4, 8), bool)
+    los = jnp.asarray([5.0, 0.0, 0.0, 2.0], jnp.float32)
+    his = jnp.asarray([4.0, 2.0, 2.0, 1.0], jnp.float32)   # rows 0 and 3 empty
+    counts = np.asarray(compact_inspect(keys, valid, sel, los, his))
+    assert counts[0].sum() == 0 and counts[3].sum() == 0
+    assert (counts[1] == 16).all() and (counts[2] == 16).all()
+    # an all-false selected mask zeroes everything regardless of interval
+    none = np.asarray(compact_inspect(keys, valid, jnp.zeros((4, 8), bool),
+                                      los, his))
+    assert none.sum() == 0
+
+
+def test_compact_inspect_matches_search_compact_many():
+    """The kernel's per-(query, slab page) counts agree with the gather
+    search path when fed the same slab and selected masks."""
+    from repro.core import index as hix
+    from repro.core.hippo import HippoIndex
+    from repro.core.predicate import (Predicate, intervals,
+                                      to_bucket_bitmaps)
+    from repro.storage.table import PagedTable
+
+    rng = np.random.default_rng(14)
+    values = np.sort(rng.uniform(0, 1000, 4000))
+    table = PagedTable.from_values(values, page_card=50)
+    idx = HippoIndex.create(table, resolution=400, density=0.2)
+    preds = [Predicate.between(float(lo), float(lo) + 30.0)
+             for lo in rng.uniform(0, 1000, 8)]
+    preds.append(Predicate(lo=5.0, hi=1.0))
+    qbms = to_bucket_bitmaps(preds, idx.state.histogram)
+    los, his = intervals(preds)
+    keys, valid = table.device_keys(), table.device_valid()
+    res = hix.search_compact_many(idx.state, qbms, keys, valid, los, his,
+                                  max_selected=table.num_pages, top_k=0)
+    assert not np.asarray(res.truncated).any()
+    # rebuild the slab + selected masks exactly as the search does
+    dense = hix.search_many(idx.state, qbms, keys, valid, los, his)
+    page_mask = np.asarray(dense.page_mask)
+    union = page_mask.any(axis=0)
+    sel = np.flatnonzero(union)
+    slab_keys = np.asarray(keys)[sel]
+    slab_valid = np.asarray(valid)[sel]
+    sel_mask = page_mask[:, sel]
+    counts = compact_inspect(jnp.asarray(slab_keys), jnp.asarray(slab_valid),
+                             jnp.asarray(sel_mask), los, his)
+    np.testing.assert_array_equal(np.asarray(counts).sum(axis=1),
+                                  np.asarray(res.counts))
 
 
 # ---------------------------------------------------------------------------

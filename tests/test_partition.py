@@ -281,13 +281,18 @@ def test_engine_sharded_mode_matches_dense_engine():
     idx, sidx = make_pair(np.sort(rng.uniform(0, 1000, 2000)), num_shards=4)
     preds = workload(rng, 24)
     dense = QueryEngine(idx, batch=8).run_all(preds)
-    routed = QueryEngine(sidx, batch=8)
-    assert routed.sharded
+    # sharded=True selects dense mode's summary-routed per-shard dispatch
+    routed = QueryEngine(sidx, batch=8, sharded=True)
+    assert routed.sharded and routed.mode == "dense"
     np.testing.assert_array_equal(routed.run_all(preds), dense)
-    # fused (Q, S) mode on the same sharded index agrees too
-    fused = QueryEngine(sidx, batch=8, sharded=False)
+    # fused (Q, S) dense mode on the same sharded index agrees too
+    fused = QueryEngine(sidx, batch=8, mode="dense", sharded=False)
     assert not fused.sharded
     np.testing.assert_array_equal(fused.run_all(preds), dense)
+    # ... as does the default (compact gather) mode
+    compact = QueryEngine(sidx, batch=8)
+    assert compact.mode == "compact" and not compact.sharded
+    np.testing.assert_array_equal(compact.run_all(preds), dense)
     assert routed.stats.shard_dispatches > 0
     occ = routed.stats.shard_occupancy()
     assert occ and all(0 < v <= 1 for v in occ.values())
@@ -308,7 +313,7 @@ def test_engine_stats_never_count_pads_as_served_work():
     assert st.occupancy == pytest.approx(2 / 16)
     # sharded mode: pads are the per-shard bucket roundings actually
     # dispatched, never the undispatched batch remainder
-    routed = QueryEngine(sidx, batch=16)
+    routed = QueryEngine(sidx, batch=16, sharded=True)
     routed.submit(Predicate.between(0, 1000))
     routed.submit(Predicate(lo=5.0, hi=1.0))
     assert len(routed.run_batch()) == 2
