@@ -21,6 +21,7 @@ import time
 from benchmarks import (
     bench_async_maintenance,
     bench_cost_model,
+    bench_drift,
     bench_engine_throughput,
     bench_fig6_overhead,
     bench_fig7_selectivity,
@@ -69,6 +70,11 @@ REGISTRY = {
                               card=100_000 if quick else bench_selectivity_sweep.CARD,
                               selectivities=(0.01, 0.5) if quick
                               else bench_selectivity_sweep.SELECTIVITIES)),
+    "drift": (bench_drift,
+              lambda quick: bench_drift.run(
+                  card=10_000 if quick else bench_drift.CARD,
+                  rounds=3 if quick else bench_drift.ROUNDS,
+                  inserts=600 if quick else bench_drift.INSERTS)),
 }
 
 MODULES = {name: mod for name, (mod, _) in REGISTRY.items()}

@@ -10,6 +10,16 @@ last bucket, which is closed on the right. ``bucketize`` maps values to bucket
 ids in [0, H-1]; out-of-range values clamp to the edge buckets (a new tuple
 beyond the observed range still hits the edge bucket, matching the paper's
 assumption that the complete histogram is never rebuilt on local updates, §4.1).
+
+Drift adaptation (beyond paper): the clamp rule means that under sustained
+distribution drift every new tuple lands in an edge bucket, page summaries
+converge toward that one bucket, and partition pruning degrades toward full
+scans. ``DriftTracker`` watches an insert stream against a fixed boundary set
+(per-bucket hit counters, edge-bucket overflow ratio, reservoir sample of the
+inserts themselves) so a maintenance layer can decide *when* the bucket space
+has drifted too far; ``rebuild`` then produces a fresh equi-depth boundary set
+from the old histogram's own boundary summary blended with the reservoir —
+no table re-read. ``runtime.writer.MaintenanceWriter`` drives the lifecycle.
 """
 from __future__ import annotations
 
@@ -92,3 +102,128 @@ def hit_bucket_range(hist: Histogram, lo, hi) -> tuple[jnp.ndarray, jnp.ndarray]
 
 def host_bounds(hist: Histogram) -> np.ndarray:
     return np.asarray(hist.bounds)
+
+
+# ---------------------------------------------------------------------------
+# Drift telemetry + incremental boundary rebuild (beyond paper; Lan et al.
+# 2023 / FITing-Tree motivate the monitored re-summarization lifecycle)
+# ---------------------------------------------------------------------------
+
+class DriftTracker:
+    """Insert-stream drift telemetry against a fixed boundary set.
+
+    Host-side and O(log H) per observed value: each insert is bucketized
+    against the armed bounds (per-bucket hit counters), counted as
+    out-of-range if it falls outside [bounds[0], bounds[-1]), and offered to
+    a fixed-size reservoir (algorithm R) so ``rebuild`` later sees an
+    unbiased sample of the whole stream since the last ``rearm``.
+
+    ``edge_overflow_ratio`` is the drift signal: the fraction of observed
+    inserts that clamped into the two edge buckets. Under an in-distribution
+    stream the expectation is ~2/H; a drifting stream pushes it toward 1.0.
+    """
+
+    def __init__(self, hist: Histogram, reservoir_size: int = 4096,
+                 seed: int = 0):
+        self._reservoir_size = reservoir_size
+        self._seed = seed
+        self.rearm(hist)
+
+    def rearm(self, hist: Histogram) -> None:
+        """Reset every counter and the reservoir against new bounds (called
+        after a re-summarization completes: drift is measured relative to
+        the bounds actually serving)."""
+        self._bounds = host_bounds(hist)
+        self.resolution = self._bounds.shape[0] - 1
+        self.hits = np.zeros((self.resolution,), np.int64)
+        self.observed = 0
+        self.out_of_range = 0
+        self.reservoir = np.empty((self._reservoir_size,), np.float32)
+        self._res_fill = 0
+        self._rng = np.random.default_rng(self._seed)
+
+    def observe(self, values) -> None:
+        """Fold a batch (or scalar) of inserted values into the telemetry."""
+        vals = np.asarray(values, np.float32).ravel()
+        if vals.size == 0:
+            return
+        ids = np.clip(np.searchsorted(self._bounds, vals, side="right") - 1,
+                      0, self.resolution - 1)
+        np.add.at(self.hits, ids, 1)
+        self.out_of_range += int(((vals < self._bounds[0])
+                                  | (vals >= self._bounds[-1])).sum())
+        for v in vals:
+            self.observed += 1
+            if self._res_fill < self.reservoir.size:
+                self.reservoir[self._res_fill] = v
+                self._res_fill += 1
+            else:
+                j = int(self._rng.integers(0, self.observed))
+                if j < self.reservoir.size:
+                    self.reservoir[j] = v
+
+    @property
+    def armed_histogram(self) -> Histogram:
+        """The boundary set drift is currently measured against."""
+        return Histogram(jnp.asarray(self._bounds))
+
+    @property
+    def edge_overflow_ratio(self) -> float:
+        """Fraction of observed inserts that landed in an edge bucket (the
+        clamp targets); 0.0 before anything is observed."""
+        if not self.observed:
+            return 0.0
+        return float(self.hits[0] + self.hits[-1]) / self.observed
+
+    def sample(self) -> np.ndarray:
+        """Copy of the reservoir's filled prefix (<= reservoir_size values)."""
+        return self.reservoir[: self._res_fill].copy()
+
+
+def rebuild(hist: Histogram, sample: np.ndarray, resolution: int | None = None,
+            *, old_count: int | None = None, new_count: int | None = None
+            ) -> Histogram:
+    """New equi-depth boundary set after drift, without re-reading the table.
+
+    The old bounds are themselves an equi-depth summary of the pre-drift
+    distribution — each of the H+1 boundary points stands for
+    ``old_count / (H+1)`` tuples' worth of mass — so a weighted quantile over
+    {old boundary points, reservoir sample points} approximates the
+    equi-depth histogram of (old table + recent inserts). ``old_count`` /
+    ``new_count`` weight the two point sets (defaults: equal mass). The
+    result gets the same strict-monotonicity treatment as ``build``.
+    """
+    sample = np.sort(np.asarray(sample, np.float32).ravel())
+    if sample.size == 0:
+        raise ValueError("rebuild needs a non-empty sample of recent inserts")
+    if resolution is None:
+        resolution = hist.resolution
+    old_pts = host_bounds(hist).astype(np.float64)
+    old_count = sample.size if old_count is None else max(int(old_count), 0)
+    new_count = sample.size if new_count is None else max(int(new_count), 0)
+    if old_count + new_count == 0:
+        old_count = new_count = 1
+    pts = np.concatenate([old_pts, sample.astype(np.float64)])
+    wts = np.concatenate([
+        np.full(old_pts.size, old_count / old_pts.size),
+        np.full(sample.size, new_count / sample.size)])
+    order = np.argsort(pts, kind="stable")
+    pts, wts = pts[order], wts[order]
+    cum = np.cumsum(wts)
+    cum /= cum[-1]
+    qs = np.linspace(0.0, 1.0, resolution + 1)
+    bounds = np.interp(qs, cum, pts)
+    bounds[0] = pts[0]          # edges cover the full blended range
+    bounds[-1] = pts[-1]
+    bounds = np.maximum.accumulate(bounds)
+    span = max(float(bounds[-1] - bounds[0]), 1.0)
+    bounds = bounds + np.arange(resolution + 1, dtype=np.float64) * (span * 1e-6)
+    # Strictness must survive the float32 cast: for large-magnitude, narrow-
+    # span keys the epsilon above collapses below the float32 ulp, and a
+    # remap drain would refuse tied bounds forever. Separate residual ties
+    # by whole float32 ulps (H is a few hundred: the host loop is free).
+    b32 = bounds.astype(np.float32)
+    for i in range(1, b32.size):
+        if b32[i] <= b32[i - 1]:
+            b32[i] = np.nextafter(b32[i - 1], np.float32(np.inf))
+    return Histogram(bounds=jnp.asarray(b32))

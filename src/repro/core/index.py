@@ -193,19 +193,25 @@ def _expand_page_mask(state: HippoState, match: jnp.ndarray,
                       num_pages: int) -> jnp.ndarray:
     """Expand matched entry page-ranges to a page bitmap (Bitmap b, Alg. 1).
 
-    Boundary deltas at each matched entry's [start, end] + prefix sum; entries
-    partition the page space, dead slots carry INT32_MAX bounds (clipped to
-    the dropped ``num_pages`` column) and zero match. ``match`` is (S,) or
-    (Q, S); the result matches with shape (num_pages,) or (Q, num_pages).
+    Live entries partition the summarized page space contiguously in logical
+    (sorted-list) order — the §5.3 invariant ``locate_slot``'s binary search
+    already relies on — so each page belongs to at most one entry, and the
+    mask is a *gather* of the owning entry's match bit: binary-search every
+    page's logical position once, then look its match up per query. (The
+    previous boundary-delta scatter + prefix sum computed the same mask but
+    XLA:CPU scatters made it the most expensive fixed cost of a batch.)
+    Pages past the last entry's ``end`` — and everything in an empty index —
+    resolve to no entry and stay False. ``match`` is (S,) or (Q, S); the
+    result matches with shape (num_pages,) or (Q, num_pages).
     """
-    m = match.astype(jnp.int32)
-    squeeze = m.ndim == 1
-    if squeeze:
-        m = m[None]
-    delta = jnp.zeros((m.shape[0], num_pages + 1), jnp.int32)
-    delta = delta.at[:, jnp.clip(state.starts, 0, num_pages)].add(m, mode="drop")
-    delta = delta.at[:, jnp.clip(state.ends + 1, 0, num_pages)].add(-m, mode="drop")
-    page_mask = jnp.cumsum(delta[:, :num_pages], axis=1) > 0
+    squeeze = match.ndim == 1
+    m = match[None] if squeeze else match
+    ls = _logical_starts(state)                        # (S,), INT32_MAX pads
+    pages = jnp.arange(num_pages, dtype=jnp.int32)
+    pos = jnp.searchsorted(ls, pages, side="right").astype(jnp.int32) - 1
+    slot = state.sorted_order[jnp.clip(pos, 0, None)]  # owning physical slot
+    in_range = (pos >= 0) & (pages <= state.ends[slot])
+    page_mask = m[:, slot] & in_range[None, :]
     return page_mask[0] if squeeze else page_mask
 
 
@@ -268,10 +274,13 @@ def search_many(state: HippoState, query_bitmaps: jnp.ndarray, keys: jnp.ndarray
 
 
 # Per-shard vmap axes for a stacked ``HippoState``: every array gains a
-# leading shard axis except ``bounds`` — the complete histogram is global
-# (one bucket space for the whole table, so query bitmaps stay shard-agnostic).
+# leading shard axis, *including* ``bounds`` — each shard carries its own
+# complete-histogram boundary set so a drift re-summarization can remap one
+# shard at a time while the others keep serving under their old bounds.
+# Query bitmaps are converted per shard epoch (``core.partition``) and fed
+# with a matching leading shard axis.
 SHARD_AXES = HippoState(
-    bounds=None, bitmaps=0, starts=0, ends=0, sorted_order=0, slot_live=0,
+    bounds=0, bitmaps=0, starts=0, ends=0, sorted_order=0, slot_live=0,
     num_entries=0, num_slots=0, summarized_until=0)
 
 
@@ -284,12 +293,16 @@ def search_many_sharded(shards: HippoState, query_bitmaps: jnp.ndarray,
     ``shards`` is a stacked ``HippoState`` (leading shard axis per
     ``SHARD_AXES``); keys/valid are (S, PPS, page_card) slabs where shard s
     owns global pages [s*PPS, (s+1)*PPS) and its entry page ids are local to
-    the slab. Each shard runs the full Algorithm 1 pipeline over its slab;
-    counts/match-stats reduce by summation over the shard axis — the
-    ``jax.lax.psum`` of a ``shard_map`` placement, expressed as an array-axis
-    sum so it is identical under vmap on one device and lowers to an
-    AllReduce when the shard axis is sharded over a mesh ``data`` axis
-    (``launch.shardings.sharded_hippo_shardings``).
+    the slab. ``query_bitmaps`` is (S, Q, W): row s holds the Q predicates
+    converted under shard s's histogram bounds — identical rows while every
+    shard shares one bounds epoch, distinct rows mid-drift-resummarization
+    (the exactness contract is per shard: a shard's page bitmaps and its
+    query bitmaps always share one bucket space). Each shard runs the full
+    Algorithm 1 pipeline over its slab; counts/match-stats reduce by
+    summation over the shard axis — the ``jax.lax.psum`` of a ``shard_map``
+    placement, expressed as an array-axis sum so it is identical under vmap
+    on one device and lowers to an AllReduce when the shard axis is sharded
+    over a mesh ``data`` axis (``launch.shardings.sharded_hippo_shardings``).
 
     Shards partition the page space, so per-shard exact counts sum to exactly
     the unsharded count: row q's ``counts`` is bit-identical to
@@ -297,7 +310,7 @@ def search_many_sharded(shards: HippoState, query_bitmaps: jnp.ndarray,
     global page order, (Q, S*PPS).
     """
     per = jax.vmap(search_many,
-                   in_axes=(SHARD_AXES, None, 0, 0, None, None))(
+                   in_axes=(SHARD_AXES, 0, 0, 0, None, None))(
         shards, query_bitmaps, keys, valid, los, his)
     s, q = per.counts.shape
     pps = keys.shape[1]
@@ -475,17 +488,19 @@ def search_compact_many_sharded(shards: HippoState, query_bitmaps: jnp.ndarray,
     """``search_compact_many`` over S shards, count-reduced like
     ``search_many_sharded``.
 
-    ``max_selected`` is the *per-shard* slab size (each shard gathers its own
-    union). Counts/pages_inspected/entries_matched sum over the shard axis —
-    bit-identical to the unsharded gather over the same pages wherever no
-    shard truncated; ``truncated`` ORs over shards per query, and
-    ``bucket_needed`` is the max per-shard union (the slab size that would
-    clear every flag). Shard-local row ids globalize by the slab offset
-    (shard s's local row r is global ``s * PPS * C + r``) and merge by an
-    ascending sort, so ``row_ids`` equals the unsharded result's.
+    ``query_bitmaps`` is (S, Q, W), one conversion per shard bounds epoch
+    (see ``search_many_sharded``). ``max_selected`` is the *per-shard* slab
+    size (each shard gathers its own union). Counts/pages_inspected/
+    entries_matched sum over the shard axis — bit-identical to the unsharded
+    gather over the same pages wherever no shard truncated; ``truncated``
+    ORs over shards per query, and ``bucket_needed`` is the max per-shard
+    union (the slab size that would clear every flag). Shard-local row ids
+    globalize by the slab offset (shard s's local row r is global
+    ``s * PPS * C + r``) and merge by an ascending sort, so ``row_ids``
+    equals the unsharded result's.
     """
     fn = partial(search_compact_many, max_selected=max_selected, top_k=top_k)
-    per = jax.vmap(fn, in_axes=(SHARD_AXES, None, 0, 0, None, None))(
+    per = jax.vmap(fn, in_axes=(SHARD_AXES, 0, 0, 0, None, None))(
         shards, query_bitmaps, keys, valid, los, his)
     if top_k:
         s, _, card = keys.shape
@@ -673,6 +688,30 @@ def resummarize_slots(cfg: HippoConfig, state: HippoState, keys: jnp.ndarray,
     fresh = bm.from_bool(agg[:s])
     new_bitmaps = jnp.where(affected[:, None], fresh, state.bitmaps)
     return state._replace(bitmaps=new_bitmaps)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def resummarize_shard(cfg: HippoConfig, state: HippoState, keys: jnp.ndarray,
+                      valid: jnp.ndarray, new_bounds: jnp.ndarray) -> HippoState:
+    """Remap a shard's partial histograms onto new complete-histogram bounds.
+
+    The drift-adaptation unit of work (``runtime.writer``): every live
+    entry's packed bitmap is rebuilt from its pages' tuples bucketized under
+    ``new_bounds``, and the state's ``bounds`` swap to the new boundary set
+    in the same functional update. Entry page ranges, the sorted list, and
+    every count are untouched — the remap changes which buckets a page's
+    tuples land in, never which pages an entry covers — so counts stay
+    bit-identical as long as query bitmaps convert under the same bounds the
+    shard serves (the per-shard epoch contract in ``core.partition``).
+
+    Built on ``resummarize_slots`` with every live slot affected: one jit
+    trace per slab shape serves every shard and every remap, and the whole
+    remap is plain jnp (kernel-free — no Pallas path to revalidate on TPU).
+    """
+    s = state.bitmaps.shape[0]
+    live = state.slot_live & (jnp.arange(s) < state.num_slots)
+    st = state._replace(bounds=new_bounds)
+    return resummarize_slots(cfg, st, keys, valid, live)
 
 
 # ---------------------------------------------------------------------------

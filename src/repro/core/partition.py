@@ -34,6 +34,15 @@ mid-swap, which every query/maintenance surface checks.
 
 Entry page ids inside each shard are *local* to its slab; global page order
 is recovered by construction since slabs are contiguous and append-ordered.
+
+Bounds epochs (drift adaptation): every shard carries its *own* complete-
+histogram boundary set (``SHARD_AXES.bounds = 0``), initially identical
+across shards. A drift re-summarization (``runtime.writer``) remaps shards
+onto new bounds one at a time, bumping that shard's entry in
+``bounds_epochs``; predicates are converted once per distinct epoch and fed
+to the fused search paths as (S, Q, W) per-shard query bitmaps, so every
+shard's query bitmaps and page bitmaps always share one bucket space —
+counts stay exact before, during, and after a partial re-summarization.
 """
 from __future__ import annotations
 
@@ -49,7 +58,8 @@ from repro.core import bitmap as bm
 from repro.core import histogram as hg
 from repro.core import index as hix
 from repro.core.hippo import MaintenanceCounters, sample_histogram
-from repro.core.predicate import Predicate, intervals, to_bucket_bitmaps
+from repro.core.predicate import (Predicate, intervals,
+                                  interval_bitmaps_sharded, to_bucket_bitmaps)
 from repro.storage.table import PagedTable
 
 
@@ -75,7 +85,7 @@ class ShardSpec:
 
 
 class ShardedHippoState(NamedTuple):
-    shards: hix.HippoState     # stacked per hix.SHARD_AXES (bounds shared)
+    shards: hix.HippoState     # stacked per hix.SHARD_AXES (incl. per-shard bounds)
     summaries: jnp.ndarray     # (S, W) u32 — OR of live entry bitmaps per shard
 
 
@@ -166,6 +176,15 @@ class ShardedHippoIndex:
     # and the table disagree about that shard, and serving from it would
     # return silently wrong counts.
     swap_in_flight: int | None = field(default=None, repr=False, compare=False)
+    # Per-shard bounds epoch: bumped when a drift re-summarization remaps a
+    # shard onto new histogram bounds. Shards sharing an epoch share one
+    # predicate conversion (``_query_bitmaps``); epochs diverge only while a
+    # re-summarization is partially drained.
+    bounds_epochs: np.ndarray = field(default=None, repr=False, compare=False)
+
+    def __post_init__(self):
+        if self.bounds_epochs is None:
+            self.bounds_epochs = np.zeros((self.spec.num_shards,), np.int64)
 
     # -- creation ------------------------------------------------------------
 
@@ -238,13 +257,27 @@ class ShardedHippoIndex:
 
     # -- query ---------------------------------------------------------------
 
+    def _query_bitmaps(self, preds: list[Predicate]) -> jnp.ndarray:
+        """(S, Q, W) packed query bitmaps, row s converted under shard s's
+        histogram bounds. One fused dispatch over the stacked (S, H+1)
+        bounds (``predicate.interval_bitmaps_sharded``) serves every epoch
+        mix: identical rows while all shards share one bounds epoch,
+        distinct rows while a drift re-summarization is partially drained —
+        same trace either way."""
+        if not preds:
+            return bm.zeros(self.cfg.resolution, self.spec.num_shards, 0)
+        los, his = intervals(preds)
+        return interval_bitmaps_sharded(
+            self.state.shards.bounds, los, his,
+            jnp.asarray([not p.empty for p in preds]))
+
     def search_batch(self, preds: list[Predicate]) -> hix.BatchSearchResult:
         """Fused (Q, S) path: one device program over every shard, counts
         reduced across the shard axis. Bit-identical counts to the unsharded
         ``HippoIndex.search_batch``; with a writer attached, counts also
         include its staged-but-undrained rows (never-stale contract)."""
         self._check_swap_guard()
-        qbms = to_bucket_bitmaps(preds, self.histogram)
+        qbms = self._query_bitmaps(preds)
         los, his = intervals(preds)
         keys, valid = self._slabs()
         if self.staging is not None and self.staging.staged_rows:
@@ -269,7 +302,7 @@ class ShardedHippoIndex:
         truncate. Row ids are global (``page_id * page_card + slot``) and
         bit-identical to the unsharded gather."""
         self._check_swap_guard()
-        qbms = to_bucket_bitmaps(preds, self.histogram)
+        qbms = self._query_bitmaps(preds)
         los, his = intervals(preds)
         keys, valid = self._slabs()
         if self.staging is not None and self.staging.staged_rows:
@@ -292,8 +325,9 @@ class ShardedHippoIndex:
         """Algorithm 1 over one shard's slab only (list-of-predicates form).
 
         Shapes are identical for every shard, so one compiled trace per batch
-        size serves all S shards."""
-        qbms = to_bucket_bitmaps(preds, self.histogram)
+        size serves all S shards. Predicates convert under *this shard's*
+        bounds (shards may serve different epochs mid-resummarization)."""
+        qbms = to_bucket_bitmaps(preds, self.shard_histogram(s))
         los, his = intervals(preds)
         return self.search_batch_shard_arrays(s, qbms, los, his)
 
@@ -312,20 +346,22 @@ class ShardedHippoIndex:
 
     def plan_batch(self, preds: list[Predicate]
                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
-        """One predicate conversion for a whole routed batch.
+        """One predicate conversion (per bounds epoch) for a routed batch.
 
-        Returns host arrays (qbms (Q, W), los (Q,), his (Q,), match (Q, S))
-        where ``match[q, s]`` is the joint-bucket test of query q against
-        shard s's summary. False entries are provably count-zero for that
-        (query, shard) pair, so a dispatcher may skip them; rows of ``qbms``
-        slice/pad directly into ``search_batch_shard_arrays`` calls without
-        reconverting the predicates per shard.
+        Returns host arrays (qbms (S, Q, W), los (Q,), his (Q,),
+        match (Q, S)) where ``qbms[s]`` holds the predicates converted under
+        shard s's bounds epoch and ``match[q, s]`` is the joint-bucket test
+        of query q (converted for shard s) against shard s's summary. False
+        entries are provably count-zero for that (query, shard) pair, so a
+        dispatcher may skip them; rows of ``qbms[s]`` slice/pad directly
+        into ``search_batch_shard_arrays`` calls without reconverting the
+        predicates per shard.
         """
         self._check_swap_guard()
-        qbms = to_bucket_bitmaps(preds, self.histogram)
+        qbms = self._query_bitmaps(preds)                       # (S, Q, W)
         los, his = intervals(preds)
-        match = np.asarray(bm.any_joint(qbms[:, None, :],
-                                        self.state.summaries[None, :, :]))
+        match = np.asarray(bm.any_joint(qbms,
+                                        self.state.summaries[:, None, :])).T
         return np.asarray(qbms), np.asarray(los), np.asarray(his), match
 
     def shard_match_matrix(self, preds: list[Predicate]) -> np.ndarray:
@@ -485,9 +521,16 @@ class ShardedHippoIndex:
 
     # -- introspection -------------------------------------------------------
 
+    def shard_histogram(self, s: int) -> hg.Histogram:
+        """Shard s's complete histogram (its current bounds epoch)."""
+        return hg.Histogram(self.state.shards.bounds[s])
+
     @property
     def histogram(self) -> hg.Histogram:
-        return hg.Histogram(self.state.shards.bounds)
+        """The histogram shared by every shard — valid only while all shards
+        sit on one bounds epoch (always true outside a partially-drained
+        re-summarization); prefer ``shard_histogram`` in epoch-aware code."""
+        return self.shard_histogram(0)
 
     @property
     def num_shards(self) -> int:

@@ -187,7 +187,8 @@ def sharded_hippo_shardings(mesh, state):
 
     Every stacked leaf's leading shard axis goes over the mesh ``data`` axis
     (divisibility-fitted, degrading to replication like every other rule
-    here); the shared histogram ``bounds`` replicates. Under this placement
+    here) — including the per-shard histogram ``bounds``, which gained a
+    shard axis with the drift-resummarization layer. Under this placement
     the shard-axis sums in ``core.index.search_many_sharded`` lower to the
     cross-device AllReduce — the ``jax.lax.psum`` of the count-reduce engine.
     """

@@ -77,10 +77,27 @@ drains shard queues between batches under one of three interleave policies:
                    benchmark contrasts)
   between_batches  after each ``run_batch``, drain up to ``drain_units``
                    shard queues/vacuums (default for sharded indexes)
-  on_depth         drain everything once ``queue_depth`` >= ``drain_depth``
+  on_depth         drain everything once the maintenance backlog — staged
+                   tuples plus table pages dirtied by deletes and awaiting
+                   vacuum — reaches ``drain_depth`` (checked by ``write()``
+                   *and* ``delete()``: a delete-heavy stream adds no queue
+                   depth but still accumulates vacuum work)
   manual           drain only on explicit ``flush()``
 
 Queue depth, staged rows, and drain latency land in ``EngineStats``.
+
+Drift re-summarization (``drift_threshold`` / ``auto_resummarize``): the
+writer's drift telemetry (``core.histogram.DriftTracker``) watches the
+staged insert stream; when the edge-bucket overflow ratio crosses
+``drift_threshold`` (after ``drift_min_observed`` inserts), the engine
+schedules a re-summarization — one remap drain unit per shard onto a
+boundary set rebuilt from the drift reservoir — and the normal drain policy
+applies it off the query path. ``auto_resummarize=False`` leaves scheduling
+to explicit ``resummarize()`` calls. ``EngineStats`` reports
+``resummarizes``, the live ``edge_overflow_ratio``, and the pruning-quality
+window around the last re-summarization (``pruning_before_resummarize`` vs.
+``pruning_after_resummarize`` — selected-page ratios of the compact batches
+before and since).
 """
 from __future__ import annotations
 
@@ -145,12 +162,20 @@ class EngineStats:
     # -- async maintenance (runtime.writer) ----------------------------------
     writes: int = 0          # tuples written through the engine
     deletes: int = 0         # tuples deleted through the engine (incl. staged kills)
-    drains: int = 0          # drain units applied (shard insert queues + vacuums)
+    drains: int = 0          # drain units applied (inserts + vacuums + resummarizes)
     drained_rows: int = 0    # staged rows applied to the index by drains
     drain_us: float = 0.0    # cumulative wall time spent inside writer drains
     queue_depth: int = 0     # staged tuples pending after the last engine op
     peak_queue_depth: int = 0
     staged_rows: int = 0     # live staged rows currently overlaid into counts
+    # -- drift re-summarization ----------------------------------------------
+    resummarizes: int = 0            # shard remap units drained
+    edge_overflow_ratio: float = 0.0  # writer drift telemetry, live value
+    # selected-page ratio of the compact batches before the last resummarize
+    # was scheduled; the matching "after" window accumulates below
+    pruning_before_resummarize: float = 0.0
+    window_selected_pages: int = 0   # compact window since the last resummarize
+    window_table_pages: int = 0
 
     @property
     def occupancy(self) -> float:
@@ -187,6 +212,14 @@ class EngineStats:
         return (self.selected_pages / self.table_pages_seen
                 if self.table_pages_seen else 0.0)
 
+    @property
+    def pruning_after_resummarize(self) -> float:
+        """Selected-page ratio of the compact batches since the last
+        re-summarization was scheduled (the whole run, if none was) — the
+        "after" half of the pruning-quality pair; lower is better pruning."""
+        return (self.window_selected_pages / self.window_table_pages
+                if self.window_table_pages else 0.0)
+
 
 _DRAIN_POLICIES = ("sync", "between_batches", "on_depth", "manual")
 
@@ -219,7 +252,17 @@ class QueryEngine:
     docstring); the default is ``between_batches`` when the index supports a
     writer and ``sync`` otherwise. ``drain_units`` bounds the shard
     queues/vacuums applied per batch under ``between_batches``;
-    ``drain_depth`` is the ``on_depth`` trigger.
+    ``drain_depth`` is the ``on_depth`` trigger (staged tuples + dirty
+    pages, checked on writes and deletes alike).
+
+    ``drift_threshold`` / ``auto_resummarize`` / ``drift_min_observed``
+    drive drift adaptation (writer-backed engines only): once at least
+    ``drift_min_observed`` inserts have been staged since the last
+    re-summarization and their edge-bucket overflow ratio reaches
+    ``drift_threshold``, a re-summarization is scheduled automatically (one
+    remap unit per shard, drained by the normal policy).
+    ``drift_threshold=None`` or ``auto_resummarize=False`` disables the
+    automatic trigger; ``resummarize()`` stays available either way.
     """
 
     def __init__(self, index, batch: int = 64, sharded: bool | None = None,
@@ -227,7 +270,10 @@ class QueryEngine:
                  drain_depth: int = 256,
                  writer: MaintenanceWriter | None = None,
                  mode: str = "auto", top_k: int = 0,
-                 compact_bucket: int | None = None):
+                 compact_bucket: int | None = None,
+                 drift_threshold: float | None = 0.25,
+                 auto_resummarize: bool = True,
+                 drift_min_observed: int = 256):
         if batch < 1:
             raise ValueError(f"batch must be >= 1, got {batch}")
         self.index = index
@@ -287,6 +333,12 @@ class QueryEngine:
         if writer is None and drain_policy != "sync":
             writer = MaintenanceWriter(index)
         self.writer = writer
+        if drift_threshold is not None and not 0.0 < drift_threshold <= 1.0:
+            raise ValueError(f"drift_threshold must be in (0, 1] or None, "
+                             f"got {drift_threshold}")
+        self.drift_threshold = drift_threshold
+        self.auto_resummarize = auto_resummarize
+        self.drift_min_observed = drift_min_observed
         self.slots: list[QueryTicket | None] = [None] * batch
         self.queue: deque[QueryTicket] = deque()
         self.stats = EngineStats()
@@ -331,8 +383,9 @@ class QueryEngine:
             self.index.insert(float(value))
             return
         self.writer.write(float(value))
+        self._maybe_schedule_resummarize()
         if (self.drain_policy == "on_depth"
-                and self.writer.queue_depth >= self.drain_depth):
+                and self._maintenance_backlog() >= self.drain_depth):
             self._drain(None)
         self._sync_writer_stats()
 
@@ -343,26 +396,81 @@ class QueryEngine:
         shards for drained ``vacuum_shard`` calls. Returns tuples deleted."""
         if self.writer is None:
             n = self.index.table.delete_where(lo, hi)
-            self.index.vacuum()
+            if n:   # a no-op delete dirtied nothing: skip the vacuum dispatch
+                self.index.vacuum()
             self.stats.deletes += n
             return n
         n = self.writer.delete(lo, hi)
         self.stats.deletes += n
+        # deletes add vacuum work, not queue depth — the on_depth trigger
+        # must fire here too or a delete-heavy stream never drains
+        if (self.drain_policy == "on_depth"
+                and self._maintenance_backlog() >= self.drain_depth):
+            self._drain(None)
         self._sync_writer_stats()
         return n
 
     def flush(self) -> int:
-        """Drain every pending shard queue and vacuum now (explicit policy).
-        Returns staged rows applied to the index."""
+        """Drain every pending resummarize, shard queue, and vacuum now
+        (explicit policy). Returns staged rows applied to the index."""
         if self.writer is None:
             return 0
         rows = self._drain(None)
         return rows
 
+    def resummarize(self, bounds=None) -> int:
+        """Schedule a re-summarization of every shard (bounds rebuilt from
+        the drift reservoir unless given) and drain it now, along with any
+        other pending maintenance. Returns remap units applied."""
+        if self.writer is None:
+            raise RuntimeError(
+                "resummarize needs a writer-backed engine (an async "
+                "drain_policy on a ShardedHippoIndex)")
+        before = self.writer.stats.resummarizes
+        self.writer.schedule_resummarize(bounds)   # may refuse (no sample):
+        self._mark_resummarize_window()            # ...then stats stay intact
+        self._drain(None)
+        return self.writer.stats.resummarizes - before
+
+    def _maintenance_backlog(self) -> int:
+        """What the ``on_depth`` trigger measures: staged tuples plus table
+        pages dirtied by deletes and still awaiting their vacuum. Both terms
+        are O(1) reads (``PagedTable.num_dirty`` is kept incrementally) —
+        this runs on every write under the on_depth policy."""
+        return self.writer.queue_depth + self.index.table.num_dirty
+
+    def _maybe_schedule_resummarize(self) -> None:
+        """Auto drift trigger: schedule a remap of every shard once enough
+        inserts have been observed and their edge-bucket overflow ratio
+        crosses the threshold. Scheduling is idempotent while a remap is
+        pending; the drain policy applies the units off the query path."""
+        w = self.writer
+        if (not self.auto_resummarize or self.drift_threshold is None
+                or w is None or w.pending_resummarize_shards()):
+            return
+        d = w.drift
+        if (d.observed >= self.drift_min_observed
+                and d.edge_overflow_ratio >= self.drift_threshold):
+            w.schedule_resummarize()       # observed > 0: the reservoir holds
+            self._mark_resummarize_window()
+
+    def _mark_resummarize_window(self) -> None:
+        """Close the pruning-quality window: the ratio accumulated so far
+        becomes the "before" figure, and the window restarts to measure the
+        batches served after the re-summarization."""
+        st = self.stats
+        st.pruning_before_resummarize = st.pruning_after_resummarize
+        st.window_selected_pages = 0
+        st.window_table_pages = 0
+
     def _drain(self, max_units: int | None) -> int:
-        rows = self.writer.drain(max_units)
+        try:
+            rows = self.writer.drain(max_units)
+        finally:
+            # even a refused drain applied some units: propagate the partial
+            # progress instead of letting EngineStats claim nothing happened
+            self._sync_writer_stats()
         self._auto_drain_suspended = False      # a successful drain re-arms
-        self._sync_writer_stats()
         return rows
 
     def _sync_writer_stats(self) -> None:
@@ -374,6 +482,8 @@ class QueryEngine:
         st.queue_depth = w.queue_depth
         st.staged_rows = w.staged_rows
         st.peak_queue_depth = max(st.peak_queue_depth, w.queue_depth)
+        st.resummarizes = w.stats.resummarizes
+        st.edge_overflow_ratio = w.drift.edge_overflow_ratio
 
     # -- execution ------------------------------------------------------------
 
@@ -467,10 +577,7 @@ class QueryEngine:
         st = self.stats
         st.compact_batches += 1
         shards = getattr(self.index, "num_shards", 1)
-        st.gather_union_pages += int(res.pages_gathered)
-        st.gather_slab_pages += bucket * shards
-        st.selected_pages += int(res.pages_selected)
-        st.table_pages_seen += self.index.table.num_pages
+        self._account_compact_dispatch(res, bucket * shards)
         needed = int(res.bucket_needed)
         if needed > bucket:
             # adapt: the next batch starts at a slab the last union fits
@@ -483,6 +590,12 @@ class QueryEngine:
             fb_preds += [_EMPTY] * (width - len(bad))
             fb = self.index.search_compact_batch(fb_preds, max_selected=cap,
                                                  top_k=self.top_k)
+            # the fallback is a real extra dispatch: its slot width and its
+            # slab capacity must land in occupancy/gather accounting, or the
+            # stats overreport exactly when the engine is doing extra work
+            st.slots_filled += len(bad)
+            st.pad_slots += width - len(bad)
+            self._account_compact_dispatch(fb, cap * shards)
             if bool(np.asarray(fb.truncated)[: len(bad)].any()):
                 raise RuntimeError(
                     "compact fallback truncated at the full gather cap — "
@@ -498,6 +611,17 @@ class QueryEngine:
         return (counts[active], inspected[active], matched[active],
                 row_ids[active] if row_ids is not None else None)
 
+    def _account_compact_dispatch(self, res, slab_capacity: int) -> None:
+        """Fold one gather dispatch (primary batch or truncation fallback)
+        into the gather telemetry and the pruning-quality window."""
+        st = self.stats
+        st.gather_union_pages += int(res.pages_gathered)
+        st.gather_slab_pages += slab_capacity
+        st.selected_pages += int(res.pages_selected)
+        st.table_pages_seen += self.index.table.num_pages
+        st.window_selected_pages += int(res.pages_selected)
+        st.window_table_pages += self.index.table.num_pages
+
     def _execute_sharded(self, active: list[int]) -> tuple:
         """Per-shard dispatch with summary pruning and count-reduce.
 
@@ -506,9 +630,10 @@ class QueryEngine:
         width so all shards share compiled traces — and per-query results sum
         across shards (shards partition the page space, so the reduction is
         exact; a pruned (query, shard) pair is provably count-zero). The
-        predicates are converted to bucket bitmaps once per batch
-        (``plan_batch``); per-shard dispatches slice and pad the converted
-        rows, with zero bitmaps + (lo=1, hi=0) intervals as the pads.
+        predicates are converted to bucket bitmaps once per shard bounds
+        epoch (``plan_batch`` returns (S, Q, W)); per-shard dispatches slice
+        and pad shard s's converted rows, with zero bitmaps + (lo=1, hi=0)
+        intervals as the pads.
         """
         preds = [self.slots[i].pred for i in active]
         qbms, los, his, match = self.index.plan_batch(preds)
@@ -522,8 +647,8 @@ class QueryEngine:
                 self.stats.shards_pruned += 1
                 continue
             width = _pow2_at_least(max(int(hit.size), _SHARD_BUCKET_MIN))
-            qb = np.zeros((width, qbms.shape[1]), qbms.dtype)
-            qb[: hit.size] = qbms[hit]
+            qb = np.zeros((width, qbms.shape[2]), qbms.dtype)
+            qb[: hit.size] = qbms[s, hit]       # shard s's epoch conversion
             lo = np.full((width,), _EMPTY.lo, np.float32)
             hi = np.full((width,), _EMPTY.hi, np.float32)
             lo[: hit.size] = los[hit]

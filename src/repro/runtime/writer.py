@@ -43,8 +43,24 @@ to its pre-drain snapshot and requeues the shard's staged rows — the overlay
 keeps counts exact, and the error surfaces from ``drain``/``flush``, not from
 a query.
 
+Drift re-summarization (beyond paper): every staged insert feeds a
+``histogram.DriftTracker`` (per-bucket hit counters + reservoir sample), so
+the writer knows when the complete histogram's bucket space has drifted out
+from under the workload — the paper never rebuilds it on local updates
+(§4.1), which under sustained drift clamps every new tuple into an edge
+bucket and erodes pruning. ``schedule_resummarize`` queues a third drain-unit
+kind: one per shard, each remapping that shard's bitmaps onto a fresh
+boundary set (``histogram.rebuild`` from the reservoir;
+``core.index.resummarize_shard``) under the same swap discipline as insert
+drains. Resummarize units drain *before* insert queues so rows staged under
+the drifted bounds land under the new ones and group well from their first
+page; each remapped shard bumps its ``bounds_epochs`` entry, and queries stay
+exact throughout because predicate conversion is per shard epoch
+(``core.partition``).
+
 ``runtime.engine.QueryEngine`` owns the interleave policy (drain-between-
-batches, drain-on-queue-depth, explicit ``flush``); the writer itself is
+batches, drain-on-queue-depth, explicit ``flush``) and the drift policy knobs
+(``drift_threshold``, auto vs. manual resummarize); the writer itself is
 policy-free mechanism.
 """
 from __future__ import annotations
@@ -56,6 +72,7 @@ import numpy as np
 
 import jax.numpy as jnp
 
+from repro.core import histogram as hg
 from repro.core import index as hix
 from repro.core.partition import ShardedHippoState, set_shard, shard_state, summary_of
 
@@ -109,9 +126,10 @@ class _ShardQueue:
 class WriterStats:
     staged: int = 0           # tuples ever staged
     killed: int = 0           # staged tuples overtaken by a delete
-    drains: int = 0           # drain units applied (insert queues + vacuums)
+    drains: int = 0           # drain units applied (inserts + vacuums + resummarizes)
     drained_rows: int = 0     # live tuples applied to the index by drains
     vacuums: int = 0          # shard vacuums drained
+    resummarizes: int = 0     # shard remaps drained (drift re-summarization)
     last_drain_us: float = 0.0
     total_drain_us: float = 0.0
 
@@ -144,6 +162,14 @@ class MaintenanceWriter:
         self._version = 0            # bumps on any staging change
         self._dev_cache: tuple | None = None
         self.stats = WriterStats()
+        # Drift telemetry: armed with the bounds serving the table tail
+        # (where appends route); rearmed when a re-summarization completes.
+        s_tail = min(index.spec.owner(max(index.table.num_pages - 1, 0)),
+                     index.spec.num_shards - 1)
+        self.drift = hg.DriftTracker(index.shard_histogram(s_tail))
+        self._pending_resummarize: list[int] = []
+        self._pending_bounds: np.ndarray | None = None
+        self._resum_epoch = 0
 
     # -- staging (the off-query-path write surface) --------------------------
 
@@ -188,6 +214,7 @@ class MaintenanceWriter:
         self._version += 1
         self._dev_cache = None
         self.stats.staged += 1
+        self.drift.observe(value)
         return s
 
     def delete(self, lo: float, hi: float) -> int:
@@ -236,10 +263,53 @@ class MaintenanceWriter:
     def pending_vacuum_shards(self) -> list[int]:
         return [int(s) for s in self.index.dirty_shards()]
 
+    def pending_resummarize_shards(self) -> list[int]:
+        """Shards still awaiting their remap onto the pending bounds."""
+        return list(self._pending_resummarize)
+
     @property
     def pending_units(self) -> int:
-        """Drain units outstanding (insert queues + dirty shards)."""
-        return len(self.pending_shards()) + len(self.pending_vacuum_shards())
+        """Drain units outstanding (resummarizes + insert queues + vacuums)."""
+        return (len(self._pending_resummarize) + len(self.pending_shards())
+                + len(self.pending_vacuum_shards()))
+
+    # -- drift re-summarization (the third drain-unit kind) ------------------
+
+    def schedule_resummarize(self, bounds=None) -> hg.Histogram:
+        """Queue a remap of every shard onto new histogram bounds.
+
+        With ``bounds=None`` the new boundary set comes from
+        ``histogram.rebuild``: the armed bounds' own boundary summary blended
+        *equal-mass* with the drift reservoir. Equal mass (rather than
+        weighting by tuple counts) is a deliberate policy: the reservoir
+        region is where the workload is writing — and, under drift, where it
+        is querying — so it gets half the boundary budget however few rows
+        it holds yet, while the old data's resolution loss is bounded at 2x.
+        An explicit ``bounds`` array schedules a manual remap (callers
+        wanting count-weighted blending can call ``histogram.rebuild`` with
+        ``old_count``/``new_count`` themselves). Rescheduling before the
+        previous remap finished replaces the pending bounds and re-queues
+        every shard. The bounds are validated at *drain* time — the
+        refusal-and-rollback point of every drain-unit kind — not here.
+
+        Returns the histogram the shards will serve once all units drain.
+        """
+        self.index._check_swap_guard()
+        self._check_attached()
+        if bounds is None:
+            sample = self.drift.sample()
+            if sample.size == 0:
+                raise RuntimeError(
+                    "no drift sample: stage inserts through write() before "
+                    "scheduling a reservoir-based resummarize, or pass "
+                    "explicit bounds")
+            hist = hg.rebuild(self.drift.armed_histogram, sample)
+            bounds = hg.host_bounds(hist)
+        bounds = np.asarray(bounds, np.float32)
+        self._pending_bounds = bounds
+        self._pending_resummarize = list(range(self.index.spec.num_shards))
+        self._resum_epoch = int(self.index.bounds_epochs.max()) + 1
+        return hg.Histogram(jnp.asarray(bounds))
 
     def queue_depths(self) -> dict[int, int]:
         """Per-shard staged tuple counts (engine stats surface)."""
@@ -292,28 +362,42 @@ class MaintenanceWriter:
     def drain(self, max_units: int | None = None) -> int:
         """Apply up to ``max_units`` drain units (default: everything).
 
-        A unit is one shard's whole insert queue or one shard's vacuum.
-        Insert queues go first, in ascending shard order — the order their
-        staged page ids were predicted in — then dirty shards vacuum.
+        A unit is one shard's resummarize remap, one shard's whole insert
+        queue, or one shard's vacuum. Resummarize units go first so staged
+        rows land under the new bounds (their pages group well from the
+        start); then insert queues in ascending shard order — the order
+        their staged page ids were predicted in — then dirty shards vacuum.
         Returns live rows applied to the index.
+
+        Stats account per applied unit: a unit that refuses partway through
+        the drain still leaves the units (and wall time) already applied in
+        ``stats.drains``/``last_drain_us``/``total_drain_us`` — a 2-of-3
+        drain records 2 drains, not 0.
         """
         t0 = time.perf_counter()
         units = rows = 0
-        for s in self.pending_shards():
-            if max_units is not None and units >= max_units:
-                break
-            rows += self._drain_shard(s)
-            units += 1
-        for s in self.pending_vacuum_shards():
-            if max_units is not None and units >= max_units:
-                break
-            self._drain_vacuum(s)
-            units += 1
-        if units:
-            us = (time.perf_counter() - t0) * 1e6
-            self.stats.drains += units
-            self.stats.last_drain_us = us
-            self.stats.total_drain_us += us
+        try:
+            for s in self.pending_resummarize_shards():
+                if max_units is not None and units >= max_units:
+                    break
+                self._drain_resummarize(s)
+                units += 1
+            for s in self.pending_shards():
+                if max_units is not None and units >= max_units:
+                    break
+                rows += self._drain_shard(s)
+                units += 1
+            for s in self.pending_vacuum_shards():
+                if max_units is not None and units >= max_units:
+                    break
+                self._drain_vacuum(s)
+                units += 1
+        finally:
+            if units:
+                us = (time.perf_counter() - t0) * 1e6
+                self.stats.drains += units
+                self.stats.last_drain_us = us
+                self.stats.total_drain_us += us
         return rows
 
     def flush(self) -> int:
@@ -427,3 +511,46 @@ class MaintenanceWriter:
             idx.swap_in_flight = None
         self.stats.vacuums += 1
         return n
+
+    def _drain_resummarize(self, s: int) -> None:
+        """Drain one shard's drift remap: rebuild its bitmaps onto the
+        pending bounds against a copy of the shard's state slice, swap it in
+        atomically, bump the shard's bounds epoch.
+
+        Same discipline as an insert drain: the swap guard refuses queries
+        mid-swap, and a refusal (invalid pending bounds) releases the guard
+        with the old state — and the old bounds — still serving; the unit
+        stays pending so a corrected ``schedule_resummarize`` can retry.
+        No table mutation happens here, so there is no snapshot to restore
+        and no slab to patch (the remap changes bitmaps, not pages).
+        """
+        idx = self.index
+        b = self._pending_bounds
+        idx.swap_in_flight = s
+        try:
+            if b is None or b.ndim != 1 or b.shape[0] != idx.cfg.resolution + 1:
+                raise RuntimeError(
+                    f"resummarize refused: pending bounds must be a "
+                    f"({idx.cfg.resolution + 1},) boundary array, got "
+                    f"{None if b is None else b.shape}")
+            if not bool((np.diff(b) > 0).all()):
+                raise RuntimeError(
+                    "resummarize refused: pending bounds are not strictly "
+                    "increasing (tied or decreasing boundaries would make "
+                    "bucketize and the remap disagree)")
+            keys, valid = idx._slabs()
+            st = shard_state(idx.state.shards, s)   # working copy (functional)
+            st = hix.resummarize_shard(idx.cfg, st, keys[s], valid[s],
+                                       jnp.asarray(b))
+            idx.state = ShardedHippoState(
+                shards=set_shard(idx.state.shards, s, st),
+                summaries=idx.state.summaries.at[s].set(summary_of(st)))
+        finally:
+            idx.swap_in_flight = None
+        idx.bounds_epochs[s] = self._resum_epoch
+        self._pending_resummarize.remove(s)
+        self.stats.resummarizes += 1
+        if not self._pending_resummarize:
+            # every shard serves the new bounds: measure drift against them
+            self.drift.rearm(hg.Histogram(jnp.asarray(b)))
+            self._pending_bounds = None

@@ -35,6 +35,9 @@ class PagedTable:
     dirty: np.ndarray = field(default=None)     # (capacity_pages,) bool — VACUUM notes
     num_pages: int = 0                          # pages in use (last may be partial)
     fill: int = 0                               # tuples in the last page
+    num_dirty: int = 0                          # pages with a pending VACUUM note
+    #                                             (kept incrementally: the engine's
+    #                                             on_depth backlog reads it per write)
     payload: dict = field(default_factory=dict)  # name -> (capacity, page_card) array
     _dev: tuple | None = field(default=None, repr=False, compare=False)  # device-view cache
     _dev_shard: tuple | None = field(default=None, repr=False, compare=False)  # slab-view cache
@@ -239,6 +242,7 @@ class PagedTable:
         if not hit.any():
             return 0                      # nothing changed: keep device caches
         npages = hit.any(axis=1)
+        self.num_dirty += int((npages & ~self.dirty[: self.num_pages]).sum())
         self.valid[: self.num_pages] &= ~hit
         self.dirty[: self.num_pages] |= npages
         self._dev = None
@@ -246,7 +250,10 @@ class PagedTable:
         return int(hit.sum())
 
     def clear_dirty(self, page_ids: np.ndarray) -> None:
-        self.dirty[page_ids] = False
+        # dedup: repeated ids must not decrement num_dirty twice
+        ids = np.unique(np.asarray(page_ids, np.int64))
+        self.num_dirty -= int(self.dirty[ids].sum())
+        self.dirty[ids] = False
 
     def truncate_to(self, num_pages: int, fill: int) -> None:
         """Drop tuples appended past a (num_pages, fill) snapshot.
@@ -257,6 +264,8 @@ class PagedTable:
         """
         self.valid[num_pages:] = False
         self.keys[num_pages:] = 0.0
+        self.num_dirty -= int(self.dirty[num_pages:].sum())
+        self.dirty[num_pages:] = False
         if num_pages:
             self.valid[num_pages - 1, fill:] = False
             self.keys[num_pages - 1, fill:] = 0.0

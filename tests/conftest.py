@@ -1,10 +1,11 @@
 """Shared pytest configuration: test tiers.
 
 Tier-1 (everything): ``PYTHONPATH=src python -m pytest -x -q``
-Fast inner loop:     ``PYTHONPATH=src python -m pytest -x -q -m "not slow and not shard and not writer and not compact"``
+Fast inner loop:     ``PYTHONPATH=src python -m pytest -x -q -m "not slow and not shard and not writer and not compact and not drift"``
 Partition suite:     ``PYTHONPATH=src python -m pytest -x -q -m shard``
 Writer suite:        ``PYTHONPATH=src python -m pytest -x -q -m writer``
 Compact suite:       ``PYTHONPATH=src python -m pytest -x -q -m compact``
+Drift suite:         ``PYTHONPATH=src python -m pytest -x -q -m drift``
 
 ``slow`` marks the model/launch/system modules that compile transformer steps
 or fork subprocess meshes; ``shard`` marks the partition-layer suite (many
@@ -12,9 +13,12 @@ distinct stacked-state jit shapes, so it compiles for ~40s); ``writer`` marks
 the async-maintenance suite (stacked-state + drain traces, similar compile
 cost); ``compact`` marks the gather-path equivalence sweep
 (``tests/test_compact.py`` — selectivity x shard count x staged rows, many
-distinct (max_selected, top_k) trace shapes). Excluding all four keeps the
-core index/kernel/maintenance inner loop well under a minute. The markers
-are documented in README.md.
+distinct (max_selected, top_k) trace shapes); ``drift`` marks the
+re-summarization equivalence sweep (``tests/test_drift.py`` — remap/epoch
+traces over several shard counts). Excluding all five keeps the core
+index/kernel/maintenance inner loop well under a minute. The markers are
+documented in README.md, and ``scripts/check_markers.py`` fails the build if
+a test module uses a marker that is not registered below.
 """
 
 
@@ -39,3 +43,10 @@ def pytest_configure(config):
         "compact vs dense vs sharded vs staged-overlay, bit-identical "
         "counts/row ids wherever untruncated); compiles many "
         "(max_selected, top_k) trace shapes — run just these with -m compact")
+    config.addinivalue_line(
+        "markers",
+        "drift: drift re-summarization sweep (tests/test_drift.py — remap "
+        "onto new histogram bounds never changes counts, across shard "
+        "counts, staged overlays, and mixed bounds epochs); compiles "
+        "stacked-state traces like the writer suite — run just these with "
+        "-m drift")

@@ -64,3 +64,29 @@ def test_selectivity_sweep_is_registered():
     assert "selectivity_sweep" in SUITES
     with pytest.raises(SystemExit):
         main(["--only", "not-a-suite"])
+
+
+def test_drift_sweep_records_in_trajectory_schema(tmp_path, monkeypatch):
+    """The drift suite is registered (so ``--json`` runs pick it up) and its
+    two-row emit shape round-trips the trajectory schema with the fields the
+    sweep's story needs (qps, speedup, sel_ratio, resummarizes)."""
+    from benchmarks.run import describe
+    assert "drift" in SUITES
+    assert len(describe("drift")) > 10
+
+    def stub(quick):
+        common.emit("drift_no_resummarize", 100.0, qps=640.0, sel_ratio=0.11)
+        common.emit("drift_adaptive", 50.0, qps=1280.0, speedup=2.0,
+                    sel_ratio=0.03, resummarizes=16)
+
+    monkeypatch.setitem(SUITES, "drift", stub)
+    out = tmp_path / "bench.json"
+    main(["--only", "drift", "--json", str(out)])
+    doc = json.loads(out.read_text())
+    rows = doc["suites"]["drift"]
+    assert [r["name"] for r in rows] == ["drift_no_resummarize",
+                                        "drift_adaptive"]
+    assert rows[1]["qps"] == 1280.0
+    assert rows[1]["derived"]["speedup"] == 2.0
+    assert rows[1]["derived"]["resummarizes"] == 16
+    assert rows[0]["derived"]["sel_ratio"] == 0.11

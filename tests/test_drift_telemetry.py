@@ -1,0 +1,83 @@
+"""Drift telemetry + boundary rebuild unit tests (``core.histogram``,
+PR 5). A separate module from test_histogram.py on purpose: that module is
+gated on ``hypothesis`` (importorskip skips it wholesale where the package
+is absent), and these tests must run everywhere — they guard the lifecycle
+the writer's re-summarization scheduling depends on. Fast tier (no marker):
+host-side numpy plus one small device histogram build."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import histogram as hg
+
+
+def test_drift_tracker_hits_and_edge_ratio():
+    hist = hg.build_uniform(0.0, 100.0, 10)
+    tr = hg.DriftTracker(hist)
+    assert tr.edge_overflow_ratio == 0.0
+    tr.observe([5.0, 15.0, 95.0])                # buckets 0, 1, 9
+    assert tr.observed == 3 and tr.out_of_range == 0
+    assert tr.hits[0] == 1 and tr.hits[1] == 1 and tr.hits[9] == 1
+    assert tr.edge_overflow_ratio == pytest.approx(2 / 3)
+    tr.observe(np.full(7, 250.0))                # clamp into bucket 9
+    assert tr.out_of_range == 7
+    assert tr.edge_overflow_ratio == pytest.approx(9 / 10)
+    tr.rearm(hg.build_uniform(0.0, 300.0, 10))   # new bounds: fresh telemetry
+    assert tr.observed == 0 and tr.sample().size == 0
+    assert tr.edge_overflow_ratio == 0.0
+
+
+def test_drift_tracker_reservoir_caps_and_samples_stream():
+    hist = hg.build_uniform(0.0, 1.0, 4)
+    tr = hg.DriftTracker(hist, reservoir_size=64)
+    stream = np.linspace(10.0, 20.0, 1000)
+    tr.observe(stream)
+    s = tr.sample()
+    assert s.size == 64                          # capped
+    assert ((s >= 10.0) & (s <= 20.0)).all()     # only observed values
+    assert np.unique(s).size > 32                # spread over the stream
+    tr.observe(0.5)                              # scalar observe path
+    assert tr.observed == 1001
+
+
+def test_rebuild_covers_blended_range_and_stays_balanced():
+    rng = np.random.default_rng(0)
+    old = rng.uniform(0.0, 100.0, 20_000)
+    hist = hg.build(jnp.asarray(old), resolution=64)
+    drifted = rng.uniform(100.0, 200.0, 4096)
+    new = hg.rebuild(hist, drifted)
+    b = np.asarray(new.bounds)
+    assert new.resolution == 64
+    assert (np.diff(b) > 0).all()                # strictly monotone
+    assert b[0] <= old.min() + 1e-3 and b[-1] >= drifted.max() - 1e-3
+    # equal-mass default: the drifted region gets about half the buckets
+    in_drift = ((b >= 99.0) & (b <= 201.0)).sum()
+    assert 20 <= in_drift <= 45, in_drift
+    # count-weighted blending shifts the budget toward the heavier side
+    light = hg.rebuild(hist, drifted, old_count=20_000, new_count=1_000)
+    in_drift_light = ((np.asarray(light.bounds) >= 99.0)).sum()
+    assert in_drift_light < in_drift
+
+
+def test_rebuild_validates_inputs():
+    hist = hg.build_uniform(0.0, 100.0, 8)
+    with pytest.raises(ValueError, match="non-empty sample"):
+        hg.rebuild(hist, np.zeros(0))
+    out = hg.rebuild(hist, np.asarray([150.0, 160.0]), resolution=16)
+    assert out.resolution == 16
+
+
+def test_rebuild_bounds_strictly_increase_in_float32():
+    """Regression: large-magnitude, narrow-span keys — the tie-separating
+    epsilon collapses below the float32 ulp, and tied bounds would wedge the
+    writer (every remap drain refuses them, and staged inserts never land).
+    Strictness must hold in the float32 the histogram actually stores."""
+    rng = np.random.default_rng(0)
+    hist = hg.build(jnp.asarray(rng.uniform(1e9, 1e9 + 10, 5000)),
+                    resolution=400)
+    drifted = rng.uniform(1e9 + 10, 1e9 + 20, 1000)
+    new = hg.rebuild(hist, drifted)
+    b = np.asarray(new.bounds)
+    assert b.dtype == np.float32
+    assert (np.diff(b) > 0).all()

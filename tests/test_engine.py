@@ -159,6 +159,74 @@ def test_admission_is_constant_time_per_query():
     assert engine.stats.served == 12
 
 
+def test_compact_fallback_accounted_in_occupancy_and_gather_stats():
+    """Bugfix regression: the truncation fallback is a real extra dispatch,
+    but it used to update neither slots_filled/pad_slots nor the gather
+    telemetry — so occupancy and gather_occupancy overreported exactly when
+    the engine was doing extra work. A compact_bucket of 1 forces every
+    page-selecting query through the fallback."""
+    rng = np.random.default_rng(21)
+    idx = make_index(np.sort(rng.uniform(0, 1000, 800)))
+    engine = QueryEngine(idx, batch=4, compact_bucket=1)
+    preds = [Predicate.between(0, 1000), Predicate.between(100, 900)]
+    counts = engine.run_all(preds)
+    want = [int(idx.search(p).count) for p in preds]
+    np.testing.assert_array_equal(counts, want)      # fallback stays exact
+    st = engine.stats
+    assert st.compact_fallbacks == 2
+    cap = idx.gather_cap
+    # gather telemetry covers both dispatches: the bucket-1 primary slab and
+    # the fallback's never-truncating cap
+    assert st.gather_slab_pages == 1 + cap
+    assert st.table_pages_seen == 2 * idx.table.num_pages
+    assert st.selected_pages > 0
+    assert 0.0 < st.gather_occupancy <= 1.0
+    # slot accounting covers the fallback's padded width (pow2 >= 8)
+    assert st.slots_filled == 2 + 2                  # primary batch + fallback
+    assert st.pad_slots == (4 - 2) + (8 - 2)
+    assert st.occupancy == pytest.approx(4 / 12)
+
+
+def test_writerless_noop_delete_skips_vacuum():
+    """Bugfix regression: the sync (writerless) delete path always ran
+    ``index.vacuum()`` — a dispatch that re-summarizes nothing — even when
+    ``delete_where`` removed zero rows."""
+    rng = np.random.default_rng(22)
+    idx = make_index(rng.uniform(0, 1000, 400))
+    engine = QueryEngine(idx, batch=4)
+    assert engine.delete(5000.0, 6000.0) == 0        # no key in range
+    assert idx.counters.vacuums == 0                 # vacuum skipped
+    assert engine.stats.deletes == 0
+    n = engine.delete(0.0, 100.0)
+    assert n > 0 and idx.counters.vacuums == 1       # real deletes still vacuum
+    assert engine.run_all([Predicate.between(0, 1000)])[0] == \
+        int(idx.search(Predicate.between(0, 1000)).count)
+
+
+def test_table_dirty_page_counter_tracks_lifecycle():
+    """``PagedTable.num_dirty`` backs the O(1) on_depth backlog read: it must
+    track delete_where (no double count), clear_dirty (idempotent), and
+    truncate_to exactly."""
+    from repro.storage.table import PagedTable
+    t = PagedTable.from_values(np.arange(64, dtype=np.float32), page_card=8)
+    assert t.num_dirty == 0
+    t.delete_where(0.0, 9.0)                       # dirties pages 0 and 1
+    assert t.num_dirty == 2
+    t.delete_where(5.0, 11.0)                      # page 1 already dirty
+    assert t.num_dirty == 2
+    assert t.num_dirty == int(t.dirty.sum())
+    t.clear_dirty(np.asarray([0]))
+    assert t.num_dirty == 1
+    t.clear_dirty(np.asarray([0]))                 # idempotent
+    assert t.num_dirty == 1
+    t.clear_dirty(np.asarray([1, 1]))              # duplicate ids: one clear
+    assert t.num_dirty == 0
+    t.delete_where(60.0, 63.0)                     # dirties the last page
+    assert t.num_dirty == 1
+    t.truncate_to(4, t.page_card)                  # drops the dirty page too
+    assert t.num_dirty == int(t.dirty.sum()) == 0
+
+
 def test_engine_compact_default_matches_explicit_dense():
     rng = np.random.default_rng(9)
     idx = make_index(np.sort(rng.uniform(0, 1000, 1500)))

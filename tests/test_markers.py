@@ -1,0 +1,57 @@
+"""Marker hygiene: the tier router (``-m`` expressions) only works if every
+marker a test module uses is registered in ``tests/conftest.py`` — pytest
+merely warns on unknown markers, so a typo silently drops a module out of
+its tier. ``scripts/check_markers.py`` is the enforcement; this runs it on
+the real suite and proves it catches both typo'd uses and stale conftests.
+"""
+import pathlib
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "scripts"))
+
+from check_markers import (BUILTIN_MARKERS, declared_markers, find_offenders,
+                           main, used_markers)
+
+
+def test_repo_test_suite_uses_only_declared_markers(capsys):
+    assert find_offenders(REPO / "tests") == []
+    assert main([str(REPO / "tests")]) == 0
+    assert "ok:" in capsys.readouterr().out
+
+
+def test_conftest_declarations_are_parsed():
+    declared = declared_markers(REPO / "tests" / "conftest.py")
+    assert {"slow", "shard", "writer", "compact", "drift"} <= declared
+
+
+def test_undeclared_marker_is_caught(tmp_path, capsys):
+    (tmp_path / "conftest.py").write_text(
+        'def pytest_configure(config):\n'
+        '    config.addinivalue_line("markers", "good: a declared marker")\n')
+    (tmp_path / "test_bad.py").write_text(
+        'import pytest\n'
+        'pytestmark = pytest.mark.shard_typo\n'
+        '@pytest.mark.good\n'
+        '@pytest.mark.parametrize("x", [1])\n'
+        'def test_x(x):\n'
+        '    pass\n')
+    assert find_offenders(tmp_path) == [("test_bad.py", "shard_typo")]
+    assert main([str(tmp_path)]) == 1
+    out = capsys.readouterr().out
+    assert "shard_typo" in out and "test_bad.py" in out
+
+
+def test_used_markers_sees_all_spellings(tmp_path):
+    p = tmp_path / "test_spellings.py"
+    p.write_text(
+        'import pytest\n'
+        'pytestmark = [pytest.mark.a, pytest.mark.b]\n'
+        '@pytest.mark.c\n'
+        'def test_x():\n'
+        '    pass\n'
+        'CASES = [pytest.param(1, marks=pytest.mark.d)]\n')
+    assert used_markers(p) == {"a", "b", "c", "d"}
+    assert "parametrize" in BUILTIN_MARKERS

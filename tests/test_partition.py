@@ -348,7 +348,7 @@ def test_placed_sharded_state_search_parity():
     keys, valid = sidx._slabs()
     st, k, v = place_sharded(mesh, sidx.state, keys, valid)
     preds = workload(rng, 8)
-    qbms = to_bucket_bitmaps(preds, sidx.histogram)
+    qbms = sidx._query_bitmaps(preds)           # (S, Q, W): per-shard epochs
     los, his = intervals(preds)
     res = hix.search_many_sharded(st.shards, qbms, k, v, los, his)
     want = np.asarray(sidx.search_batch(preds).counts)

@@ -404,6 +404,63 @@ def test_engine_rejects_writer_bound_elsewhere():
         QueryEngine(b, batch=4, drain_policy="manual", writer=w)
 
 
+def test_drain_stats_count_partial_progress():
+    """Bugfix regression: a drain that applies two units and then refuses on
+    the third used to record zero drains and zero drain time (the stats were
+    only written after the loop), and ``engine._sync_writer_stats``
+    propagated the lie. Units and wall time must land as they apply."""
+    aidx = make_sidx(np.linspace(0, 99, 64), num_shards=2, max_slots=12,
+                     relocate_on_update=True)
+    engine = QueryEngine(aidx, batch=4, drain_policy="manual",
+                         auto_resummarize=False)
+    writer = engine.writer
+    # unit 3: an insert queue that refuses at slot capacity (one shard's
+    # worth of distinct relocating values) ...
+    for v in np.linspace(0, 99, 100):
+        engine.write(float(v))
+    # ... units 1+2: one valid remap per shard, drained first
+    writer.schedule_resummarize(np.linspace(-1.0, 101.0,
+                                            aidx.cfg.resolution + 1))
+    assert writer.pending_units == 3
+    with pytest.raises(RuntimeError, match="slot capacity"):
+        engine.flush()
+    assert writer.stats.drains == 2              # the two applied remaps
+    assert writer.stats.resummarizes == 2
+    assert writer.stats.last_drain_us > 0
+    assert writer.stats.total_drain_us > 0
+    # the engine saw the partial progress despite the raise
+    assert engine.stats.drains == 2
+    assert engine.stats.drain_us > 0
+    assert engine.stats.resummarizes == 2
+    # recovery: counts stay exact through the overlay, discard re-arms
+    want = brute_force(aidx.table, 0, 99) + writer.staged_rows
+    assert engine.run_all([Predicate.between(0, 99)])[0] == want
+
+
+def test_on_depth_policy_triggers_on_delete_backlog():
+    """Bugfix regression: a delete-heavy stream under on_depth used to
+    accumulate vacuum work forever — deletes add no queue depth and
+    ``delete()`` never checked the trigger. The trigger now measures staged
+    tuples + dirty pages, on writes and deletes alike."""
+    values = np.sort(np.random.default_rng(73).uniform(0, 100, 400))
+    aidx = make_sidx(values)
+    engine = QueryEngine(aidx, batch=4, drain_policy="on_depth",
+                         drain_depth=6)
+    steps = 0
+    for i in range(30):                      # narrow disjoint deletes only
+        engine.delete(i * 3.0, i * 3.0 + 1.5)
+        steps += 1
+        if engine.stats.drains:
+            break
+    assert engine.stats.drains > 0, \
+        "delete-only stream never drained its vacuums"
+    assert engine.writer.stats.vacuums > 0
+    assert not aidx.table.dirty[: aidx.table.num_pages].any()
+    assert steps < 30                        # triggered by backlog, not luck
+    got = engine.run_all([Predicate.between(0, 100)])
+    assert got[0] == brute_force(aidx.table, 0, 100)
+
+
 def test_drain_refusal_suspends_auto_drain_and_discard_recovers():
     """A refused between-batches drain raises once, then queries keep
     serving exactly via the overlay instead of re-raising forever;
