@@ -37,7 +37,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, measure
 from repro.core.partition import ShardedHippoIndex
 from repro.core.predicate import Predicate
 from repro.runtime.engine import QueryEngine
@@ -114,15 +114,12 @@ def run(card: int = CARD, rounds: int = ROUNDS, inserts: int = INSERTS) -> None:
     assert eng_adpt.stats.resummarizes >= SHARDS, \
         "drift sweep never triggered a re-summarization"
 
-    # Time the two sweep-end engines interleaved (best of alternating reps)
+    # Time the two sweep-end engines interleaved (shared min-of-reps helper)
     # so a throttling or noisy-neighbor window hits both modes, not one.
     final_preds = plan[-1][1]
-    us_base = us_adpt = float("inf")
-    for _ in range(3):
-        us_base = min(us_base, timeit(lambda: eng_base.run_all(final_preds),
-                                      warmup=1, iters=3))
-        us_adpt = min(us_adpt, timeit(lambda: eng_adpt.run_all(final_preds),
-                                      warmup=1, iters=3))
+    us_base, us_adpt = measure(lambda: eng_base.run_all(final_preds),
+                               lambda: eng_adpt.run_all(final_preds),
+                               warmup=1, reps=9)
     qps_base = Q / (us_base / 1e6)
     qps_adpt = Q / (us_adpt / 1e6)
     speedup = qps_adpt / qps_base

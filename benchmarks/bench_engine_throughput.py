@@ -18,7 +18,7 @@ import numpy as np
 
 import jax
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, measure, timeit
 from repro.core import index as hix
 from repro.core.hippo import HippoIndex
 from repro.core.predicate import Predicate, intervals, to_bucket_bitmaps
@@ -63,8 +63,9 @@ def run(card: int = CARD, batches=BATCHES) -> None:
         assert (loop_counts == batch_counts).all(), \
             f"batched counts diverge from the per-query loop at Q={q}"
 
-        us_loop = timeit(loop, warmup=1, iters=3)
-        us_batch = timeit(batched, warmup=1, iters=3)
+        # interleaved so a noise window hits both contenders; the loop path
+        # is all Python dispatch overhead and needs the extra reps to settle
+        us_loop, us_batch = measure(loop, batched, warmup=2, reps=7)
         qps_loop = q / (us_loop / 1e6)
         qps_batch = q / (us_batch / 1e6)
         emit(f"engine_loop_q{q}", us_loop, qps=round(qps_loop, 1))
@@ -76,7 +77,7 @@ def run(card: int = CARD, batches=BATCHES) -> None:
         # (the compact default is measured in bench_selectivity_sweep)
         engine = QueryEngine(idx, batch=q, mode="dense")
         engine.run_all(preds)  # warm the trace before timing
-        us_eng = timeit(lambda: engine.run_all(preds), warmup=1, iters=3)
+        us_eng = timeit(lambda: engine.run_all(preds), warmup=1, iters=5)
         emit(f"engine_run_all_q{q}", us_eng,
              qps=round(q / (us_eng / 1e6), 1),
              occupancy=round(engine.stats.occupancy, 3))

@@ -41,8 +41,8 @@ def run(card=CARD) -> None:
             return mask.sum()
 
         us_btree = timeit(via_btree, warmup=1, iters=3)
-        emit(f"fig10_{qname}", us_hippo, btree_us=round(us_btree, 1),
-             sf=0.001)
+        emit(f"fig10_{qname}", us_hippo, qps=round(1e6 / us_hippo, 1),
+             btree_us=round(us_btree, 1), sf=0.001)
 
     # sanity: Q6 via Hippo equals Q6 via brute force
     brute = (li.shipdate >= lo) & (li.shipdate <= hi) & (li.discount >= 0.05) \

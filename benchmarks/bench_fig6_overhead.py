@@ -41,7 +41,10 @@ def run(scales=SCALES) -> None:
              ratio=round(btree_b / hippo_b, 1),
              ratio_rle=round(btree_b / hippo_cb, 1),
              entries=idx.num_entries)
+        # qps here = index builds per second (the gate's rate metric for
+        # this suite: init-time regressions drop it)
         emit(f"fig6b_init_card{card}", us_hippo,
+             qps=round(1e6 / us_hippo, 2),
              btree_us=round(us_btree, 1),
              speedup=round(us_btree / us_hippo, 2))
 

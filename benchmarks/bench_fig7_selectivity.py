@@ -39,6 +39,7 @@ def run(card=CARD) -> None:
 
         est = cost.query_time_tuples(sf, 400, 0.2, card)
         emit(f"fig7_sf{sf:g}", us_hippo,
+             qps=round(1e6 / us_hippo, 1),
              btree_us=round(us_btree, 1), scan_us=round(us_scan, 1),
              pages_inspected=int(res.pages_inspected),
              total_pages=table.num_pages,

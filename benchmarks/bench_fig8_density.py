@@ -32,6 +32,7 @@ def run(card=CARD) -> None:
         if base is None:
             base = size
         emit(f"fig8_density{int(d*100)}", us_q,
+             qps=round(1e6 / us_q, 1),
              init_us=round(us_init, 1), size_bytes=size,
              size_vs_d20=round(size / base, 3), entries=idx.num_entries,
              pages_inspected=int(res.pages_inspected),

@@ -29,6 +29,7 @@ def run(card=CARD) -> None:
         us_q = timeit(lambda: idx.search(pred).count)
         res = idx.search(pred)
         emit(f"fig9_resolution{h}", us_q,
+             qps=round(1e6 / us_q, 1),
              init_us=round(us_init, 1), size_bytes=idx.nbytes(),
              rle_bytes=idx.nbytes(compressed=True), entries=idx.num_entries,
              pages_inspected=int(res.pages_inspected),

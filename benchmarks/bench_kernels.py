@@ -1,10 +1,14 @@
-"""Kernel-path microbenchmarks: the §3.2 bitmap AND filter, the §4.2
-bucketize probe, and §3.3 page inspection.
+"""Kernel-path microbenchmarks for all five Hippo kernels with roofline
+derived fields (achieved GB/s and fraction-of-roofline per row).
 
-On this CPU host the jnp reference path is the execution path (Pallas runs in
-interpret mode for validation only — see tests/test_kernels.py); derived
-fields report the arithmetic/bytes so the TPU roofline for each kernel can be
-read off: bitmap_and moves E*W*4 bytes per query (memory-bound on VPU).
+On this CPU host the jnp reference path is the execution path (Pallas runs
+in interpret mode for validation only — see tests/test_kernels.py). Each row
+carries the analytic mandatory-traffic model from ``repro.roofline``
+(``bytes``/``ops``), the achieved bandwidth of the timed run against the
+detected hardware-table row (measured STREAM on CPU, HBM on TPU), and the
+v5e projection (``tpu_roofline_us``) so the TPU roofline can be read off a
+CPU trajectory. ``roofline_frac`` > 1 means the working set fit in cache —
+the model counts main-memory traffic only.
 """
 from __future__ import annotations
 
@@ -13,41 +17,74 @@ import numpy as np
 import jax.numpy as jnp
 
 from benchmarks.common import emit, timeit
-from repro.core import bitmap as bm
+from repro.kernels.batch_filter.ref import batch_filter_ref
 from repro.kernels.bitmap_and.ref import bitmap_and_any_ref
 from repro.kernels.bucketize.ref import bucketize_ref
+from repro.kernels.compact_inspect.ref import compact_inspect_ref
 from repro.kernels.page_inspect.ref import page_inspect_ref
+from repro.roofline import KERNELS, TPU_V5E, hardware, roofline
 
-V5E_HBM = 819e9
+
+def _emit_kernel(name: str, kernel: str, us: float, **shape) -> None:
+    """One kernel row: analytic traffic + achieved-vs-roofline fields."""
+    hw = hardware()
+    cost = KERNELS[kernel](**shape)
+    rl = roofline(cost, us / 1e6, hw)
+    tpu = roofline(cost, us / 1e6, TPU_V5E)
+    emit(name, us,
+         bytes=int(cost.bytes_moved), ops=int(cost.ops),
+         hardware=hw.name,
+         achieved_gbps=round(rl["achieved_gbps"], 3),
+         roofline_frac=round(rl["roofline_frac"], 4),
+         bound=rl["bound"],
+         tpu_roofline_us=round(tpu["roofline_us"], 2))
 
 
 def run() -> None:
     rng = np.random.default_rng(0)
 
-    e, w = 65_536, 13           # 64k entries, H=400 -> 13 words
+    # §3.2 single-query bitmap AND: 64k entries, H=400 -> 13 words
+    e, w = 65_536, 13
     entries = jnp.asarray(rng.integers(0, 2**32, (e, w), dtype=np.uint32))
     query = jnp.asarray(rng.integers(0, 2**32, (w,), dtype=np.uint32))
-    us = timeit(lambda: bitmap_and_any_ref(entries, query), warmup=2, iters=5)
-    nbytes = e * w * 4
-    emit("kernel_bitmap_and_64k", us, bytes=nbytes,
-         tpu_roofline_us=round(nbytes / V5E_HBM * 1e6, 2))
+    us = timeit(lambda: bitmap_and_any_ref(entries, query), warmup=3, iters=15)
+    _emit_kernel("kernel_bitmap_and_64k", "bitmap_and", us, e=e, w=w)
 
+    # PR 1 fused batch filter: Q=64 predicates against 16k entries
+    q, e2 = 64, 16_384
+    qbms = jnp.asarray(rng.integers(0, 2**32, (q, w), dtype=np.uint32))
+    ents = jnp.asarray(rng.integers(0, 2**32, (e2, w), dtype=np.uint32))
+    us = timeit(lambda: batch_filter_ref(qbms, ents), warmup=2, iters=11)
+    _emit_kernel("kernel_batch_filter_q64_16k", "batch_filter", us,
+                 q=q, e=e2, w=w)
+
+    # §4.2 bucketize probe: 1M values into H=400 buckets
     n, h = 1_048_576, 400
     bounds = jnp.asarray(np.linspace(0, 1e6, h + 1), jnp.float32)
     values = jnp.asarray(rng.uniform(0, 1e6, n), jnp.float32)
-    us = timeit(lambda: bucketize_ref(values, bounds, h), warmup=2, iters=5)
-    emit("kernel_bucketize_1m", us, values=n,
-         tpu_roofline_us=round(n * 4 / V5E_HBM * 1e6, 2))
+    us = timeit(lambda: bucketize_ref(values, bounds, h), warmup=2, iters=11)
+    _emit_kernel("kernel_bucketize_1m", "bucketize", us, n=n, h=h)
 
+    # §3.3 page inspection: 16k pages x 128 tuples, 30% possible-qualified
     p, c = 16_384, 128
     keys = jnp.asarray(rng.uniform(0, 1e6, (p, c)), jnp.float32)
     valid = jnp.asarray(rng.random((p, c)) < 0.95)
     mask = jnp.asarray(rng.random(p) < 0.3)
     us = timeit(lambda: page_inspect_ref(keys, valid, mask, 1e5, 2e5)[1],
-                warmup=2, iters=5)
-    nbytes = p * c * 5
-    emit("kernel_page_inspect_16kpages", us, bytes=nbytes,
-         tpu_roofline_us=round(nbytes / V5E_HBM * 1e6, 2))
+                warmup=3, iters=15)
+    _emit_kernel("kernel_page_inspect_16kpages", "page_inspect", us, p=p, c=c)
+
+    # PR 4 gather-slab inspect: Q=64 queries over a 2k-page gathered slab
+    m = 2_048
+    skeys = jnp.asarray(rng.uniform(0, 1e6, (m, c)), jnp.float32)
+    svalid = jnp.asarray(rng.random((m, c)) < 0.95)
+    sel = jnp.asarray(rng.random((q, m)) < 0.4)
+    los = jnp.asarray(rng.uniform(0, 5e5, q), jnp.float32)
+    his = los + 2e5
+    us = timeit(lambda: compact_inspect_ref(skeys, svalid, sel, los, his),
+                warmup=2, iters=11)
+    _emit_kernel("kernel_compact_inspect_q64_2kslab", "compact_inspect", us,
+                 q=q, m=m, c=c)
 
 
 if __name__ == "__main__":

@@ -2,38 +2,72 @@
 
 Every benchmark prints rows:  name,us_per_call,derived
 ``derived`` is a ';'-separated key=value list (sizes, ratios, counts).
+
+Timing methodology (one helper, every suite): interleaved min-of-reps.
+``measure(*fns)`` rotates through the candidate callables rep by rep and
+keeps each one's best wall time, so a throttling or noisy-neighbor window
+hits every contender instead of whichever happened to run inside it, and
+the regression gate (``benchmarks/check.py``) compares like with like
+across runs. ``emit`` stamps the method into each row's derived fields.
 """
 from __future__ import annotations
 
+import math
 import time
 
 import jax
 
 ROWS: list[tuple[str, float, str]] = []
 
+# Stamped into every row so trajectory files self-describe how they were
+# timed; bump the name if the methodology ever changes again.
+TIMING_METHOD = "interleaved_min_of_reps"
+
+
+def measure(*fns, warmup: int = 1, reps: int = 3) -> list[float]:
+    """Best wall time per call in microseconds for each callable.
+
+    All callables are warmed first, then timed interleaved: rep 1 times each
+    fn once, then rep 2, ... — min over reps per fn (blocking on jax
+    outputs). Interleaving is what makes A-vs-B speedups honest; min is the
+    right estimator for a fixed-work benchmark where every source of error
+    is additive noise.
+    """
+    for fn in fns:
+        for _ in range(warmup):
+            _block(fn())
+    best = [math.inf] * len(fns)
+    for _ in range(max(1, reps)):
+        for i, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            _block(fn())
+            best[i] = min(best[i], time.perf_counter() - t0)
+    return [b * 1e6 for b in best]
+
 
 def timeit(fn, *, warmup: int = 1, iters: int = 3) -> float:
-    """Median wall time per call in microseconds (block on jax outputs)."""
-    for _ in range(warmup):
-        _block(fn())
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        _block(fn())
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2] * 1e6
+    """Single-callable convenience wrapper over ``measure`` (min of
+    ``iters`` reps after ``warmup`` warm calls)."""
+    return measure(fn, warmup=warmup, reps=iters)[0]
 
 
 def _block(out):
+    """Block until device work behind ``out`` is done.
+
+    Only the "not a jax value" complaints are swallowed (host-side results:
+    plain lists/floats/objects have no buffers to wait on). Real device
+    errors — a failed computation surfacing at block time — must propagate,
+    or a benchmark whose kernel crashes gets timed as a success.
+    """
     try:
         jax.block_until_ready(out)
-    except Exception:  # noqa: BLE001 — host-side results
+    except (AttributeError, TypeError):  # host-side result, nothing to block on
         pass
     return out
 
 
 def emit(name: str, us: float, **derived) -> None:
+    derived.setdefault("method", TIMING_METHOD)
     d = ";".join(f"{k}={v}" for k, v in derived.items())
     ROWS.append((name, us, d))
     print(f"{name},{us:.1f},{d}", flush=True)

@@ -4,16 +4,23 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
 Scale with --quick for CI-speed runs; ``--list`` prints every registered
 benchmark with the one-line description from its module docstring;
 ``--json out.json`` additionally writes the machine-readable result set
-(per-suite rows with parsed derived fields plus the run config) so the repo
-can accumulate ``BENCH_*.json`` trajectory files across PRs.
+(per-suite rows with parsed derived fields plus the run config, strict
+JSON — nan/inf sanitized to null) so the repo can accumulate
+``BENCH_*.json`` trajectory files across PRs; ``--check BASELINE.json``
+turns the run into a regression gate — the fresh rows are compared against
+the committed trajectory and the process exits nonzero with a per-row
+delta table when any suite's ``qps`` or ``achieved_gbps`` drops more than
+the tolerance (benchmarks/check.py; default 20%, per-row overridable).
 
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig7] [--list]
-                                         [--json out.json]
+      [--json out.json] [--check BENCH_baseline.json] [--tolerance 0.2]
+      [--row-tolerance drift_adaptive=0.5]
 """
 from __future__ import annotations
 
 import argparse
 import json
+import math
 import platform
 import sys
 import time
@@ -33,7 +40,7 @@ from benchmarks import (
     bench_selectivity_sweep,
     bench_shard_scaling,
 )
-from benchmarks import common
+from benchmarks import check, common
 
 # One registry: suite name -> (module, quick-aware runner). The module half
 # feeds --list (its docstring) and tests/test_docs.py's coverage check.
@@ -91,28 +98,45 @@ def describe(name: str) -> str:
 
 def parse_derived(derived: str) -> dict:
     """Parse a row's ';'-separated ``key=value`` derived field, coercing
-    values to int/float where they parse (the JSON half of the CSV contract
-    in benchmarks/common.py)."""
+    values to int/float/bool where they parse (the JSON half of the CSV
+    contract in benchmarks/common.py). Non-finite numbers (a qps division
+    on a zero timing prints ``nan``/``inf``) become ``None`` so the JSON
+    document stays strict and the regression gate is never fed a value
+    that compares as neither pass nor fail."""
     out = {}
     for item in derived.split(";"):
         if not item:
             continue
         key, _, val = item.partition("=")
+        if val in ("True", "False"):
+            out[key] = val == "True"
+            continue
         for cast in (int, float):
             try:
-                out[key] = cast(val)
+                num = cast(val)
                 break
             except ValueError:
                 continue
         else:
             out[key] = val
+            continue
+        out[key] = num if math.isfinite(num) else None
     return out
+
+
+def _finite(val):
+    """Strict-JSON scalar: non-finite floats become None."""
+    if isinstance(val, float) and not math.isfinite(val):
+        return None
+    return val
 
 
 def rows_to_json(suite_rows: dict[str, list], *, quick: bool) -> dict:
     """Machine-readable result document for ``--json``: every emitted row
     grouped by suite, derived fields parsed, plus the run configuration —
-    the schema the repo's ``BENCH_*.json`` trajectory files accumulate."""
+    the schema the repo's ``BENCH_*.json`` trajectory files accumulate.
+    Strict JSON throughout: every non-finite value is sanitized to null so
+    any consumer (the regression gate first) can parse with allow_nan off."""
     return {
         "schema": 1,
         "generated_unix_s": int(time.time()),
@@ -122,7 +146,8 @@ def rows_to_json(suite_rows: dict[str, list], *, quick: bool) -> dict:
             "platform": platform.platform(),
         },
         "suites": {
-            suite: [{"name": name, "us_per_call": round(us, 1),
+            suite: [{"name": name,
+                     "us_per_call": _finite(round(us, 1)),
                      "qps": parse_derived(derived).get("qps"),
                      "derived": parse_derived(derived)}
                     for name, us, derived in rows]
@@ -131,7 +156,7 @@ def rows_to_json(suite_rows: dict[str, list], *, quick: bool) -> dict:
     }
 
 
-def main(argv=None) -> None:
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None, choices=sorted(SUITES),
@@ -143,13 +168,33 @@ def main(argv=None) -> None:
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="write the run's rows as machine-readable JSON "
                          "(per-suite, derived fields parsed) to OUT")
+    ap.add_argument("--check", default=None, metavar="BASELINE",
+                    help="after the run, gate the fresh rows against this "
+                         "committed BENCH_*.json trajectory: exit 1 when "
+                         "any qps/achieved_gbps drops past tolerance")
+    ap.add_argument("--tolerance", type=float,
+                    default=check.DEFAULT_TOLERANCE,
+                    help="allowed fractional drop per gated metric "
+                         "(default %(default)s)")
+    ap.add_argument("--row-tolerance", action="append", default=[],
+                    metavar="ROW=FRAC",
+                    help="per-row tolerance override (repeatable; bare row "
+                         "name or suite/row)")
     args = ap.parse_args(argv)
 
     if args.list:
         width = max(len(n) for n in SUITES)
         for name in SUITES:
             print(f"{name:<{width}}  {describe(name)}")
-        return
+        return 0
+
+    # fail fast on an unreadable baseline / bad override before benching
+    try:
+        row_tol = check.parse_row_tolerances(args.row_tolerance)
+        baseline = check.load_trajectory(args.check) if args.check else None
+    except (check.BaselineError, ValueError) as e:
+        print(f"# {e}", file=sys.stderr)
+        return 2
 
     print("name,us_per_call,derived")
     t0 = time.time()
@@ -162,13 +207,26 @@ def main(argv=None) -> None:
         fn(args.quick)
         suite_rows[name] = common.ROWS[before:]
     print(f"# total_wall_s={time.time()-t0:.1f}", file=sys.stderr)
+    doc = rows_to_json(suite_rows, quick=args.quick)
     if args.json:
-        doc = rows_to_json(suite_rows, quick=args.quick)
         with open(args.json, "w") as f:
-            json.dump(doc, f, indent=2, sort_keys=True)
+            json.dump(doc, f, indent=2, sort_keys=True, allow_nan=False)
             f.write("\n")
         print(f"# wrote {args.json}", file=sys.stderr)
+    if baseline is not None:
+        if baseline.get("config", {}).get("quick") != args.quick:
+            print("# WARNING: baseline quick flag differs from this run — "
+                  "rows time different scales; refresh the baseline at the "
+                  "matching scale", file=sys.stderr)
+        deltas = check.compare(baseline, doc, tolerance=args.tolerance,
+                               row_tolerance=row_tol)
+        print(check.delta_table(deltas))
+        if check.failures(deltas):
+            print(f"# REGRESSION vs {args.check}", file=sys.stderr)
+            return 1
+        print(f"# gate ok vs {args.check}", file=sys.stderr)
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -1,0 +1,84 @@
+"""Gate one benchmark trajectory file against another, offline.
+
+The file-vs-file half of the regression gate (``benchmarks/run.py --check``
+is the run-then-gate half; both share ``benchmarks/check.py``): compare a
+fresh ``BENCH_*.json`` against the last committed one and fail when any
+suite's ``qps`` or ``achieved_gbps`` dropped more than the tolerance —
+20% by default, per-row overridable for known-noisy configs. Partial runs
+(``--only``) gate only the suites they ran; vanished gated metrics fail.
+
+  PYTHONPATH=src python scripts/check_bench.py BASELINE.json CURRENT.json \
+      [--tolerance 0.2] [--row-tolerance drift_adaptive=0.5] [--quiet]
+
+``--coverage`` instead audits a single trajectory as a would-be baseline,
+``scripts/check_markers.py``-style: every suite registered in
+``benchmarks/run.py`` must be present and emit at least one gated row, so
+a new bench that never emits ``qps``/``achieved_gbps`` cannot dodge the
+gate. Exit status: 0 clean, 1 regression/coverage gap, 2 malformed input.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))
+
+from benchmarks.check import (BaselineError, compare, coverage_problems,  # noqa: E402
+                              delta_table, failures, load_trajectory,
+                              parse_row_tolerances, DEFAULT_TOLERANCE)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="committed BENCH_*.json to gate against")
+    ap.add_argument("current", nargs="?", default=None,
+                    help="fresh BENCH_*.json to check (omit with --coverage)")
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE,
+                    help="allowed fractional drop per gated metric "
+                         "(default %(default)s)")
+    ap.add_argument("--row-tolerance", action="append", default=[],
+                    metavar="ROW=FRAC",
+                    help="per-row override (repeatable; bare row name or "
+                         "suite/row)")
+    ap.add_argument("--coverage", action="store_true",
+                    help="audit BASELINE for gate coverage instead of "
+                         "comparing: every registered suite must emit a "
+                         "qps/achieved_gbps row")
+    ap.add_argument("--quiet", action="store_true",
+                    help="print only failing rows and the summary line")
+    args = ap.parse_args(argv)
+
+    try:
+        doc = load_trajectory(args.baseline)
+        if args.coverage:
+            from benchmarks.run import SUITES
+            problems = coverage_problems(doc, set(SUITES))
+            for p in problems:
+                print(p)
+            if problems:
+                return 1
+            print(f"ok: {args.baseline} covers all {len(SUITES)} registered "
+                  "suites with gated rows")
+            return 0
+        if args.current is None:
+            ap.error("CURRENT is required unless --coverage is given")
+        current = load_trajectory(args.current)
+        row_tol = parse_row_tolerances(args.row_tolerance)
+    except (BaselineError, ValueError) as e:
+        print(e, file=sys.stderr)
+        return 2
+
+    deltas = compare(doc, current, tolerance=args.tolerance,
+                     row_tolerance=row_tol)
+    print(delta_table(deltas, verbose=not args.quiet))
+    if failures(deltas):
+        print(f"REGRESSION: {args.current} vs {args.baseline}",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,3 +1,4 @@
 from repro.roofline.analysis import (  # noqa: F401
-    HW, cell_roofline, flops_model, hbm_bytes_model, collective_bytes_model,
+    KERNELS, Hardware, KernelCost, TPU_V5E, hardware, measure_cpu_stream,
+    roofline, roofline_from_traffic,
 )

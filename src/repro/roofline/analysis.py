@@ -1,286 +1,202 @@
-"""Roofline analysis for the dry-run cells (TPU v5e target).
+"""Analytic memory/compute roofline for the five Hippo Pallas kernels.
 
-CPU container => no wall-clock MFU; the three roofline terms are *derived*:
+Hippo's hot phases (bitmap_and / batch_filter / bucketize / page_inspect /
+compact_inspect) are elementwise scans and reductions: arithmetic intensity
+is a handful of vector ops per byte, far below any accelerator's
+compute/bandwidth ridge, so every one of them is memory-bound and the honest
+performance statement is *achieved bytes/s as a fraction of the memory
+roofline*. This module turns a timed run into that statement:
 
-  compute term    = step FLOPs / (chips x 197 TFLOP/s bf16)
-  memory term     = step HBM bytes / (chips x 819 GB/s)
-  collective term = step wire bytes through a chip / 50 GB/s per link
+  cost = KERNELS["bitmap_and"](e=65536, w=13)     # analytic bytes + ops
+  rl   = roofline(cost, seconds, hardware("cpu_stream"))
+  rl["achieved_gbps"], rl["roofline_frac"], rl["bound"]
 
-FLOPs/bytes come from an analytic per-block model (below) because XLA's
-``cost_analysis`` counts a ``lax.scan`` body once (verified empirically —
-DESIGN.md §7), which silently undercounts layer-stacked and chunk-scanned
-programs. The analytic model is validated against ``cost_analysis`` on an
-*unrolled* small-depth lowering (``validate_flops_model``), and the dry-run's
-parsed HLO collective inventory cross-checks which collectives the model
-should be counting.
+The bytes/ops models count *mandatory* main-memory traffic (every operand
+read once, every output written once) and vector ops on the padded dense
+shapes the kernels actually execute — no cache modeling. A ``roofline_frac``
+above 1.0 therefore means the working set fit in cache (common for the
+smaller CPU configs), not a broken clock; on TPU, where VMEM residency is
+explicit, the model is the classic HBM roofline.
 
-MODEL_FLOPS(6ND) is reported per cell along with MODEL/HLO — the fraction of
-executed compute that is "useful," exposing remat and attention overheads.
+The hardware table carries the v5e numbers the kernel block shapes were
+sized for plus a measured-STREAM entry for this CPU host, so CPU trajectory
+files are gated against what the machine can actually sustain rather than
+paper numbers.  ``hardware()`` with no argument picks by jax backend.
 """
 from __future__ import annotations
 
+import functools
+import math
+import time
 from dataclasses import dataclass
 
-from repro.configs.base import ModelConfig, ShapeConfig
+import numpy as np
 
 
 @dataclass(frozen=True)
-class _HW:
-    peak_flops: float = 197e12       # bf16 FLOP/s per chip (v5e)
-    hbm_bw: float = 819e9            # bytes/s per chip
-    ici_bw: float = 50e9             # bytes/s per link (conservative 1 link)
-    hbm_bytes: float = 16 * 2 ** 30  # capacity per chip
+class Hardware:
+    """One row of the roofline hardware table.
 
-
-HW = _HW()
-
-_P_BYTES = 2          # bf16 params
-_A_BYTES = 2          # bf16 activations
-
-
-# ---------------------------------------------------------------------------
-# parameter counts
-# ---------------------------------------------------------------------------
-
-def _block_param_counts(cfg: ModelConfig, kind: str) -> tuple[float, float]:
-    """(total_params, active_params) for one block of ``kind``."""
-    d, f = cfg.d_model, cfg.d_ff
-    hd = cfg.resolved_head_dim
-    fe = cfg.moe_d_ff or f
-    if kind in ("attn", "attn_local", "moe"):
-        attn = d * cfg.num_heads * hd + 2 * d * cfg.num_kv_heads * hd \
-            + cfg.num_heads * hd * d
-        if kind == "moe":
-            routed = cfg.num_experts * 3 * d * fe
-            shared = cfg.num_shared_experts * 3 * d * fe
-            router = d * cfg.num_experts
-            total = attn + routed + shared + router
-            active = attn + cfg.top_k * 3 * d * fe + shared + router
-            return total, active
-        ffn = 3 * d * f
-        return attn + ffn, attn + ffn
-    if kind == "rec":
-        rec = 5 * d * d + cfg.conv_width * d     # w_x, w_gate, w_out, w_r, w_i
-        return rec + 3 * d * f, rec + 3 * d * f
-    # rwkv: 5 tmix proj + out  + lora (small) + channel mix
-    tmix = 5 * d * d + 2 * d * 32 * 6
-    cmix = 2 * d * f + d * d
-    return tmix + cmix, tmix + cmix
-
-
-def param_counts(cfg: ModelConfig) -> tuple[float, float]:
-    """(total, active) parameters including embeddings/head."""
-    total = active = 0.0
-    pattern = list(cfg.block_pattern) * cfg.num_units + list(cfg.leftover_pattern)
-    for kind in pattern:
-        t, a = _block_param_counts(cfg, kind)
-        total += t
-        active += a
-    emb = cfg.vocab_size * cfg.d_model
-    head = 0 if cfg.tie_embeddings else cfg.vocab_size * cfg.d_model
-    return total + emb + head, active + emb + head
-
-
-# ---------------------------------------------------------------------------
-# FLOPs model
-# ---------------------------------------------------------------------------
-
-def _block_flops_per_token(cfg: ModelConfig, kind: str, ctx: float,
-                           group_tokens: int = 0) -> float:
-    """Executed forward FLOPs for one token through one block; ``ctx`` =
-    attention context length (S/2 for causal training, cache length for
-    decode). MoE counts all E*C capacity slots (capacity_factor slop executes
-    whether or not a slot is filled — matches the slot-indexed dispatch)."""
-    d = cfg.d_model
-    hd = cfg.resolved_head_dim
-    fe = cfg.moe_d_ff or cfg.d_ff
-    _, active = _block_param_counts(cfg, kind)
-    if kind == "moe":
-        import math
-        routed = cfg.top_k * 3 * d * fe
-        if group_tokens:  # capacity rounds up per group (slot-indexed dispatch)
-            c = max(1, math.ceil(cfg.capacity_factor * group_tokens * cfg.top_k
-                                 / cfg.num_experts))
-            eff_cf = cfg.num_experts * c / (group_tokens * cfg.top_k)
-        else:
-            eff_cf = cfg.capacity_factor
-        active = active - routed + eff_cf * routed
-    flops = 2.0 * active                        # every active param = 1 MAC/token
-    if kind in ("attn", "attn_local", "moe"):
-        eff_ctx = min(ctx, cfg.window) if (kind == "attn_local" and cfg.window) else ctx
-        flops += 4.0 * cfg.num_heads * hd * eff_ctx   # QK^T + PV
-    elif kind == "rwkv":
-        flops += 6.0 * d * hd                    # state update + readout per head
-    elif kind == "rec":
-        flops += 12.0 * d                        # RG-LRU elementwise recurrence
-    return flops
-
-
-def _trunk_flops_per_token(cfg: ModelConfig, ctx: float,
-                           group_tokens: int = 0) -> float:
-    pattern = list(cfg.block_pattern) * cfg.num_units + list(cfg.leftover_pattern)
-    return sum(_block_flops_per_token(cfg, k, ctx, group_tokens) for k in pattern)
-
-
-def flops_model(cfg: ModelConfig, shape: ShapeConfig) -> dict:
-    """Step FLOPs (global) + MODEL_FLOPS (6·N_active·D) for the cell."""
-    b, s = shape.global_batch, shape.seq_len
-    total, active = param_counts(cfg)
-    if shape.kind == "train":
-        tokens = b * s
-        fwd = tokens * (_trunk_flops_per_token(cfg, s / 2, group_tokens=s)
-                        + 2.0 * cfg.d_model * cfg.vocab_size)
-        step = 4.0 * fwd                 # fwd + remat recompute + 2x bwd
-        model = 6.0 * active * tokens
-    elif shape.kind == "prefill":
-        tokens = b * s
-        step = tokens * _trunk_flops_per_token(cfg, s / 2, group_tokens=s) \
-            + b * 2.0 * cfg.d_model * cfg.vocab_size
-        model = 2.0 * active * tokens
-    else:  # decode: one token against a seq_len context
-        step = b * (_trunk_flops_per_token(cfg, s, group_tokens=1)
-                    + 2.0 * cfg.d_model * cfg.vocab_size)
-        model = 2.0 * active * b
-    return {"step_flops": step, "model_flops": model,
-            "useful_ratio": model / step}
-
-
-# ---------------------------------------------------------------------------
-# HBM traffic model (per chip)
-# ---------------------------------------------------------------------------
-
-def hbm_bytes_model(cfg: ModelConfig, shape: ShapeConfig, chips: int,
-                    accum: int = 1, moment_bytes: int = 4) -> float:
-    """Mandatory HBM bytes per chip per step.
-
-    train:  params read 3x (fwd + remat + bwd) x accum microbatches is wrong —
-            weights stream once per microbatch: 3 reads per microbatch; plus
-            optimizer read/write and gradient write; plus activation traffic.
-    decode: params once + KV cache read/write (the classic decode wall).
+    ``mem_bw`` is sustainable main-memory bandwidth in bytes/s (HBM for TPU,
+    measured STREAM-copy for CPU); ``vector_ops`` is elementwise ops/s on
+    the unit these kernels map to (VPU lanes for TPU, SIMD for CPU).
     """
-    total, _ = param_counts(cfg)
-    p_loc = total * _P_BYTES / chips
-    b, s = shape.global_batch, shape.seq_len
-    d = cfg.d_model
-    if shape.kind == "train":
-        tokens_loc = b * s / chips
-        act = tokens_loc * d * _A_BYTES
-        n_layers = cfg.num_layers
-        param_traffic = p_loc * 3.0 * accum
-        opt_traffic = (total / chips) * (2 * moment_bytes * 2 + 2 * _P_BYTES + 4)
-        act_traffic = act * n_layers * 8.0       # r/w per block fwd+bwd+remat
-        return param_traffic + opt_traffic + act_traffic
-    if shape.kind == "prefill":
-        tokens_loc = b * s / chips
-        return p_loc + tokens_loc * d * _A_BYTES * cfg.num_layers * 4.0
-    # decode
-    cache_loc = _cache_bytes(cfg, shape) / chips
-    return p_loc + cache_loc + b * d * _A_BYTES * cfg.num_layers / chips
+    name: str
+    mem_bw: float
+    vector_ops: float
+    note: str = ""
+
+    @property
+    def ridge_ai(self) -> float:
+        """Ops/byte above which a kernel stops being memory-bound."""
+        return self.vector_ops / self.mem_bw
 
 
-def _cache_bytes(cfg: ModelConfig, shape: ShapeConfig) -> float:
-    b, s = shape.global_batch, shape.seq_len
-    hd = cfg.resolved_head_dim
-    total = 0.0
-    pattern = list(cfg.block_pattern) * cfg.num_units + list(cfg.leftover_pattern)
-    for kind in pattern:
-        if kind in ("attn", "moe"):
-            total += 2 * b * s * cfg.num_kv_heads * hd * _A_BYTES
-        elif kind == "attn_local":
-            total += 2 * b * min(s, cfg.window) * cfg.num_kv_heads * hd * _A_BYTES
-        elif kind == "rec":
-            total += b * cfg.d_model * (cfg.conv_width) * _A_BYTES
-        else:  # rwkv
-            total += b * cfg.d_model * hd * 4    # fp32 wkv state
-    return total
+# v5e per chip: 819 GB/s HBM; VPU = 8x128 lanes x ~4 ALUs x ~940 MHz ~= 3.9
+# Tops/s elementwise (order-of-magnitude — these kernels sit at ~1 op/byte,
+# ~5x under the ridge, so the memory term dominates regardless).
+TPU_V5E = Hardware("tpu_v5e", mem_bw=819e9, vector_ops=3.9e12,
+                   note="v5e chip: HBM 819 GB/s, VPU 8x128 lanes")
 
 
-# ---------------------------------------------------------------------------
-# collective traffic model (per chip, wire bytes)
-# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def measure_cpu_stream(mbytes: int = 64, reps: int = 5) -> float:
+    """Measured STREAM-copy bandwidth of this host in bytes/s (min-time rep).
 
-def collective_bytes_model(cfg: ModelConfig, shape: ShapeConfig, *,
-                           data: int = 16, model: int = 16, pods: int = 1,
-                           accum: int = 1, grad_bytes: int = 4,
-                           layout: str = "tp") -> dict:
-    """Wire bytes per chip per step, by mechanism.
-
-    layout="tp" (default): 2-D param sharding; 2 all-reduces per block over
-          ``model`` per token; params sharded over ``data`` all-gathered per
-          microbatch use (fwd + remat + bwd = 3x); grads reduce-scattered.
-    layout="fsdp_only": batch shards over data x model jointly; NO tensor
-          parallelism — every chip all-gathers the full weights 3x per step
-          and reduce-scatters grads over all chips (overlappable with
-          compute; the dominant term is latency-hidden in steady state).
-    DP:   multi-pod gradient all-reduce over ``pods``.
+    A 64 MiB float64 copy defeats every cache level that matters; traffic is
+    2 bytes moved per byte of array (read + write). Cached per process so
+    benchmark loops pay the ~100 ms measurement once.
     """
-    total, _ = param_counts(cfg)
-    b, s = shape.global_batch, shape.seq_len
-    d = cfg.d_model
-    n_layers = cfg.num_layers
-    chips = data * model * pods
+    n = mbytes * 2**20 // 8
+    src = np.full(n, 1.0)
+    dst = np.empty_like(src)
+    best = math.inf
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        np.copyto(dst, src)
+        best = min(best, time.perf_counter() - t0)
+    return 2 * 8 * n / best
 
-    if shape.kind == "train":
-        if layout == "fsdp_only":
-            ways = data * model
-            fsdp = 3.0 * accum * total * _P_BYTES * (ways - 1) / ways
-            rs = total * grad_bytes * (ways - 1) / ways
-            dp = (2.0 * total * grad_bytes / ways) * (pods - 1) / pods
-            return {"fsdp_allgather": fsdp, "grad_reduce_scatter": rs,
-                    "tp_allreduce": 0.0, "pod_allreduce": dp,
-                    "total": fsdp + rs + dp}
-        # per chip: params it must receive = total/model_shard minus own piece
-        p_per_model_shard = total * _P_BYTES / model
-        fsdp = 3.0 * accum * p_per_model_shard * (data - 1) / data
-        rs = (total * grad_bytes / model) * (data - 1) / data
-        tokens_loc = b * s / (data * pods)       # per model-column
-        tp = 2 * n_layers * 2 * tokens_loc * d * _A_BYTES * 2 * (model - 1) / model
-        dp = (2.0 * total * grad_bytes / (model * data)) * (pods - 1) / pods
-        return {"fsdp_allgather": fsdp, "grad_reduce_scatter": rs,
-                "tp_allreduce": tp, "pod_allreduce": dp,
-                "total": fsdp + rs + tp + dp}
-    if shape.kind == "prefill":
-        p_per_model_shard = total * _P_BYTES / model
-        fsdp = p_per_model_shard * (data - 1) / data
-        tokens_loc = b * s / (data * pods) if b >= data * pods else b * s / pods
-        tp = 2 * n_layers * tokens_loc * d * _A_BYTES * 2 * (model - 1) / model
-        return {"fsdp_allgather": fsdp, "tp_allreduce": tp, "total": fsdp + tp}
-    # decode: weights stay sharded over model only (no FSDP gather in the
-    # steady state if params are replicated over data for serving); TP
-    # all-reduces per layer + flash-decode LSE combine (negligible bytes)
-    b_loc = max(b / (data * pods), 1)
-    tp = 2 * n_layers * b_loc * d * _A_BYTES * 2 * (model - 1) / model
-    lse = n_layers * b_loc * cfg.num_heads * 8 * 2   # max+sum scalars fp32
-    return {"tp_allreduce": tp, "lse_combine": lse, "total": tp + lse}
+
+@functools.lru_cache(maxsize=None)
+def _cpu_stream_hardware() -> Hardware:
+    bw = measure_cpu_stream()
+    # SIMD elementwise throughput estimate: ~4 lanes x 2 ports x ~3 GHz.
+    # Like the VPU number it only decides the (never-reached) ridge.
+    return Hardware("cpu_stream", mem_bw=bw, vector_ops=24e9 * 1.0,
+                    note=f"measured STREAM copy {bw / 1e9:.1f} GB/s")
+
+
+def hardware(name: str | None = None) -> Hardware:
+    """Look up a hardware-table row; ``None`` detects by jax backend."""
+    if name is None:
+        import jax
+        name = "tpu_v5e" if jax.default_backend() == "tpu" else "cpu_stream"
+    if name == "tpu_v5e":
+        return TPU_V5E
+    if name == "cpu_stream":
+        return _cpu_stream_hardware()
+    raise KeyError(f"unknown hardware {name!r}; have: tpu_v5e, cpu_stream")
 
 
 # ---------------------------------------------------------------------------
-# cell roofline
+# per-kernel traffic/ops models
 # ---------------------------------------------------------------------------
 
-def cell_roofline(cfg: ModelConfig, shape: ShapeConfig, *, chips: int = 256,
-                  data: int = 16, model: int = 16, pods: int = 1,
-                  accum: int = 1, moment_bytes: int = 4,
-                  layout: str = "tp") -> dict:
-    fl = flops_model(cfg, shape)
-    hbm = hbm_bytes_model(cfg, shape, chips, accum=accum,
-                          moment_bytes=moment_bytes)
-    coll = collective_bytes_model(cfg, shape, data=data, model=model,
-                                  pods=pods, accum=accum, layout=layout)
-    t_compute = fl["step_flops"] / (chips * HW.peak_flops)
-    t_memory = hbm / HW.hbm_bw
-    t_coll = coll["total"] / HW.ici_bw
-    terms = {"compute_s": t_compute, "memory_s": t_memory,
-             "collective_s": t_coll}
-    bottleneck = max(terms, key=terms.get)
-    t_bound = max(terms.values())
+@dataclass(frozen=True)
+class KernelCost:
+    """Mandatory main-memory bytes and elementwise vector ops for one call."""
+    kernel: str
+    bytes_moved: float
+    ops: float
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.ops / self.bytes_moved if self.bytes_moved else 0.0
+
+
+def bitmap_and_cost(*, e: int, w: int) -> KernelCost:
+    """§3.2 single-query filter: (E, W) u32 entries AND a (W,) u32 query,
+    any-reduced to (E,) i32. Reads E*W words + the query, writes E flags."""
+    bytes_moved = (e * w + w + e) * 4
+    ops = 2.0 * e * w              # AND + nonzero/or-reduce per word
+    return KernelCost("bitmap_and", bytes_moved, ops)
+
+
+def batch_filter_cost(*, q: int, e: int, w: int, s: int = 1) -> KernelCost:
+    """PR 1/2 fused batch filter: (Q, W) queries x (S, E, W) entries ->
+    (S, Q, E) flags. Entries are read once per query (the (Q, E) grid
+    re-streams the entry tile per query row)."""
+    bytes_moved = (s * q * e * w + q * w + s * q * e) * 4
+    ops = 3.0 * s * q * e * w      # AND + nonzero + or-reduce
+    return KernelCost("batch_filter", bytes_moved, ops)
+
+
+def bucketize_cost(*, n: int, h: int) -> KernelCost:
+    """§4.2 bucket probe: N f32 values binary-searched into H buckets.
+    Values in, ids out; the (H+1,) bounds table is VMEM/cache resident."""
+    bytes_moved = (2 * n + (h + 1)) * 4
+    ops = float(n) * math.ceil(math.log2(h + 1))
+    return KernelCost("bucketize", bytes_moved, ops)
+
+
+def page_inspect_cost(*, p: int, c: int) -> KernelCost:
+    """§3.3 false-positive filter: (P, C) f32 keys + (P, C) bool validity
+    under a (P,) page mask -> (P, C) qualifying bools + (P,) i32 counts."""
+    bytes_moved = p * c * 4 + p * c + p + p * c + p * 4
+    ops = 5.0 * p * c              # 2 cmps + 2 ands + count-reduce
+    return KernelCost("page_inspect", bytes_moved, ops)
+
+
+def compact_inspect_cost(*, q: int, m: int, c: int) -> KernelCost:
+    """PR 4 gather-slab inspect: (M, C) f32 gathered keys + validity,
+    (Q, M) selection mask, (Q,) bounds -> (Q, M) i32 counts. The slab is
+    re-streamed per query row like batch_filter's entry tile."""
+    bytes_moved = q * m * c * 4 + q * m * c + q * m + q * 8 + q * m * 4
+    ops = 5.0 * q * m * c          # sel & valid & 2 cmps + count-reduce
+    return KernelCost("compact_inspect", bytes_moved, ops)
+
+
+KERNELS = {
+    "bitmap_and": bitmap_and_cost,
+    "batch_filter": batch_filter_cost,
+    "bucketize": bucketize_cost,
+    "page_inspect": page_inspect_cost,
+    "compact_inspect": compact_inspect_cost,
+}
+
+
+# ---------------------------------------------------------------------------
+# roofline statement
+# ---------------------------------------------------------------------------
+
+def roofline_from_traffic(bytes_moved: float, ops: float, seconds: float,
+                          hw: Hardware) -> dict:
+    """Roofline verdict for any (bytes, ops, time) triple on ``hw``.
+
+    ``roofline_us`` is the analytic floor (slower of the memory and compute
+    terms); ``roofline_frac`` = floor / measured — 1.0 means the run hit the
+    roofline, >1.0 means the model's mandatory-traffic assumption was beaten
+    (cache residency on CPU).
+    """
+    if seconds <= 0:
+        raise ValueError(f"seconds must be positive, got {seconds}")
+    t_mem = bytes_moved / hw.mem_bw
+    t_ops = ops / hw.vector_ops
+    t_roof = max(t_mem, t_ops)
     return {
-        **terms,
-        "bottleneck": bottleneck.replace("_s", ""),
-        "roofline_fraction": t_compute / t_bound if t_bound else 0.0,
-        "step_flops": fl["step_flops"],
-        "model_flops": fl["model_flops"],
-        "useful_ratio": fl["useful_ratio"],
-        "hbm_bytes_per_chip": hbm,
-        "collective_bytes_per_chip": coll,
+        "hardware": hw.name,
+        "bytes": float(bytes_moved),
+        "ops": float(ops),
+        "achieved_gbps": bytes_moved / seconds / 1e9,
+        "roofline_gbps": hw.mem_bw / 1e9,
+        "roofline_us": t_roof * 1e6,
+        "roofline_frac": t_roof / seconds,
+        "bound": "memory" if t_mem >= t_ops else "compute",
     }
+
+
+def roofline(cost: KernelCost, seconds: float, hw: Hardware) -> dict:
+    out = roofline_from_traffic(cost.bytes_moved, cost.ops, seconds, hw)
+    out["kernel"] = cost.kernel
+    return out

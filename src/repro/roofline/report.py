@@ -1,131 +1,65 @@
-"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables.
+"""Print the per-kernel roofline table for a ``BENCH_*.json`` trajectory.
 
-Reads artifacts/dryrun/*.json (compile proof, memory, HLO collective
-inventory) and combines with the analytic roofline model (analysis.py).
+Reads the ``kernels`` suite rows (each carries its analytic ``bytes``/``ops``
+derived fields from ``benchmarks/bench_kernels.py``) and restates them
+against a hardware-table row — by default the one the run was gated against,
+or any other with ``--hardware`` (e.g. project a CPU run onto v5e to see
+what the same traffic would cost on HBM):
 
-  PYTHONPATH=src python -m repro.roofline.report [--dryrun-dir artifacts/dryrun]
-      [--out artifacts/roofline.md]
+  PYTHONPATH=src python -m repro.roofline.report BENCH_2026-08-09.json
+  PYTHONPATH=src python -m repro.roofline.report BENCH.json --hardware tpu_v5e
 """
 from __future__ import annotations
 
 import argparse
-import glob
 import json
-from pathlib import Path
 
-from repro.configs import SHAPES, get_config
-from repro.roofline.analysis import HW, cell_roofline, param_counts
+from repro.roofline.analysis import hardware, roofline_from_traffic
 
 
-def fmt_bytes(b: float) -> str:
-    return f"{b / 2**30:.2f}"
+def kernel_rows(doc: dict) -> list[dict]:
+    """The kernels-suite rows of a trajectory document that carry the
+    analytic traffic fields (bytes + ops) a roofline needs."""
+    rows = doc.get("suites", {}).get("kernels", [])
+    return [r for r in rows
+            if {"bytes", "ops"} <= set(r.get("derived", {}))]
 
 
-def fmt_s(x: float) -> str:
-    if x >= 1.0:
-        return f"{x:.2f}s"
-    if x >= 1e-3:
-        return f"{x*1e3:.1f}ms"
-    return f"{x*1e6:.0f}us"
-
-
-def load_records(dryrun_dir: str) -> list[dict]:
-    recs = []
-    for f in sorted(glob.glob(f"{dryrun_dir}/*.json")):
-        recs.append(json.load(open(f)))
-    return recs
-
-
-def one_liner(cfg, shape, rl) -> str:
-    """What would move the dominant term down (per-cell §Roofline note)."""
-    b = rl["bottleneck"]
-    if b == "compute":
-        return "compute-bound: raise arithmetic efficiency (fusion, larger tiles)"
-    if b == "memory":
-        if shape.kind == "decode":
-            return ("HBM-bound on weights+KV streaming: quantize KV (int8) or "
-                    "raise batch to amortize weight reads")
-        return "HBM-bound: fuse elementwise chains, cut remat re-reads"
-    return ("ICI-bound: overlap collectives with compute, shrink TP degree "
-            "or gradient compression")
-
-
-def build_tables(recs: list[dict]) -> str:
-    lines = []
-    lines.append("### Dry-run table (compile proof, per-device memory)\n")
-    lines.append("| arch | shape | mesh | accum | compile_s | args GiB | temp GiB "
-                 "| TPU est GiB | fits 16GiB | collectives (HLO) |")
-    lines.append("|---|---|---|---|---|---|---|---|---|---|")
-    for r in recs:
-        m = r["memory"]
-        ops = ",".join(o.replace("all-", "a").replace("reduce-scatter", "rs")
-                       .replace("collective-permute", "cp")
-                       for o in r["collectives"]["ops"]) or "-"
+def build_table(doc: dict, hw_name: str | None = None) -> str:
+    hw = hardware(hw_name)
+    lines = [
+        f"roofline vs {hw.name}: {hw.mem_bw / 1e9:.0f} GB/s mem, "
+        f"{hw.vector_ops / 1e9:.0f} Gops/s vector ({hw.note})",
+        f"{'kernel row':<34} {'us':>10} {'GB':>8} {'GB/s':>8} "
+        f"{'roof us':>9} {'frac':>6}  bound",
+    ]
+    for row in kernel_rows(doc):
+        d = row["derived"]
+        us = row["us_per_call"]
+        rl = roofline_from_traffic(d["bytes"], d["ops"], us / 1e6, hw)
         lines.append(
-            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r.get('grad_accum',1)} "
-            f"| {r['compile_s']} | {fmt_bytes(m['argument_bytes_per_device'])} "
-            f"| {fmt_bytes(m['temp_bytes_per_device'])} "
-            f"| {fmt_bytes(m['tpu_total_bytes_est'])} "
-            f"| {'yes' if r['fits_hbm_16gib'] else 'NO'} | {ops} |")
-    lines.append("")
-
-    lines.append("### Roofline table (single-pod 16x16, analytic terms — "
-                 "see methodology)\n")
-    lines.append("| arch | shape | layout | compute | memory | collective | bottleneck "
-                 "| roofline frac | MODEL_FLOPS | MODEL/HLO |")
-    lines.append("|---|---|---|---|---|---|---|---|---|---|")
-    singles = [r for r in recs if r["mesh"] == "16x16"]
-    for r in singles:
-        cfg = get_config(r["arch"])
-        shape = SHAPES[r["shape"]]
-        rl = cell_roofline(cfg, shape, chips=256, data=16, model=16, pods=1,
-                           accum=r.get("grad_accum", 1),
-                           moment_bytes=2 if "400b" in r["arch"] else 4,
-                           layout=r.get("layout", "tp"))
-        lines.append(
-            f"| {r['arch']} | {r['shape']} | {r.get('layout','tp')} | {fmt_s(rl['compute_s'])} "
-            f"| {fmt_s(rl['memory_s'])} | {fmt_s(rl['collective_s'])} "
-            f"| {rl['bottleneck']} | {rl['roofline_fraction']:.2f} "
-            f"| {rl['model_flops']:.2e} | {rl['useful_ratio']:.2f} |")
-    lines.append("")
-
-    lines.append("### Per-cell bottleneck notes\n")
-    for r in singles:
-        cfg = get_config(r["arch"])
-        shape = SHAPES[r["shape"]]
-        rl = cell_roofline(cfg, shape, chips=256, data=16, model=16, pods=1,
-                           accum=r.get("grad_accum", 1),
-                           layout=r.get("layout", "tp"))
-        lines.append(f"- **{r['arch']} x {r['shape']}**: {rl['bottleneck']}-bound "
-                     f"({one_liner(cfg, shape, rl)})")
-    lines.append("")
+            f"{row['name']:<34} {us:>10.1f} {rl['bytes'] / 1e9:>8.4f} "
+            f"{rl['achieved_gbps']:>8.1f} {rl['roofline_us']:>9.1f} "
+            f"{rl['roofline_frac']:>6.2f}  {rl['bound']}")
+    if len(lines) == 2:
+        lines.append("  (no kernels-suite rows with bytes/ops fields — "
+                     "rerun benchmarks.run with the kernels suite)")
     return "\n".join(lines)
 
 
-def main(argv=None):
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--dryrun-dir", default="artifacts/dryrun")
-    ap.add_argument("--out", default="artifacts/roofline.md")
+    ap.add_argument("bench_json", help="BENCH_*.json trajectory file")
+    ap.add_argument("--hardware", default=None,
+                    choices=("tpu_v5e", "cpu_stream"),
+                    help="hardware-table row to restate against "
+                         "(default: detect by jax backend)")
     args = ap.parse_args(argv)
-    recs = load_records(args.dryrun_dir)
-    text = build_tables(recs)
-    Path(args.out).write_text(text)
-    print(f"wrote {args.out} ({len(recs)} cells)")
-    # quick console summary of worst cells
-    singles = [r for r in recs if r["mesh"] == "16x16"]
-    scored = []
-    for r in singles:
-        cfg = get_config(r["arch"])
-        rl = cell_roofline(cfg, SHAPES[r["shape"]], chips=256,
-                           accum=r.get("grad_accum", 1),
-                           layout=r.get("layout", "tp"))
-        scored.append((rl["roofline_fraction"], rl["bottleneck"],
-                       r["arch"], r["shape"]))
-    scored.sort()
-    print("\nworst roofline fractions:")
-    for fr, b, a, s in scored[:6]:
-        print(f"  {fr:.3f}  {b:>10}  {a} x {s}")
+    with open(args.bench_json) as f:
+        doc = json.load(f)
+    print(build_table(doc, args.hardware))
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

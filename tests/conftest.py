@@ -1,11 +1,12 @@
 """Shared pytest configuration: test tiers.
 
 Tier-1 (everything): ``PYTHONPATH=src python -m pytest -x -q``
-Fast inner loop:     ``PYTHONPATH=src python -m pytest -x -q -m "not slow and not shard and not writer and not compact and not drift"``
+Fast inner loop:     ``PYTHONPATH=src python -m pytest -x -q -m "not slow and not shard and not writer and not compact and not drift and not bench"``
 Partition suite:     ``PYTHONPATH=src python -m pytest -x -q -m shard``
 Writer suite:        ``PYTHONPATH=src python -m pytest -x -q -m writer``
 Compact suite:       ``PYTHONPATH=src python -m pytest -x -q -m compact``
 Drift suite:         ``PYTHONPATH=src python -m pytest -x -q -m drift``
+Bench gate:          ``PYTHONPATH=src python -m pytest -x -q -m bench``
 
 ``slow`` marks the model/launch/system modules that compile transformer steps
 or fork subprocess meshes; ``shard`` marks the partition-layer suite (many
@@ -15,7 +16,10 @@ cost); ``compact`` marks the gather-path equivalence sweep
 (``tests/test_compact.py`` — selectivity x shard count x staged rows, many
 distinct (max_selected, top_k) trace shapes); ``drift`` marks the
 re-summarization equivalence sweep (``tests/test_drift.py`` — remap/epoch
-traces over several shard counts). Excluding all five keeps the core
+traces over several shard counts); ``bench`` marks the perf regression
+gate's end-to-end invocation (a quick ``benchmarks.run`` sweep checked
+against the committed ``BENCH_*.json`` baseline — real benchmark work, so
+it stays out of the inner loop). Excluding all six keeps the core
 index/kernel/maintenance inner loop well under a minute. The markers are
 documented in README.md, and ``scripts/check_markers.py`` fails the build if
 a test module uses a marker that is not registered below.
@@ -50,3 +54,9 @@ def pytest_configure(config):
         "counts, staged overlays, and mixed bounds epochs); compiles "
         "stacked-state traces like the writer suite — run just these with "
         "-m drift")
+    config.addinivalue_line(
+        "markers",
+        "bench: perf regression gate end-to-end (tests/test_check_bench.py "
+        "— a quick kernels-suite benchmarks.run gated against the committed "
+        "BENCH_*.json baseline); runs real benchmark timing loops — run "
+        "just these with -m bench")

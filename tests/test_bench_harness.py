@@ -1,22 +1,100 @@
-"""Benchmark harness plumbing: the ``--json`` machine-readable output path.
+"""Benchmark harness plumbing: timing helpers, the ``--json``
+machine-readable output path, and the committed ``BENCH_*.json`` baselines.
 
 The benchmarks themselves are too slow for the test tier, so these tests
 drive ``benchmarks.run`` with a stub suite that emits canned rows and check
-the JSON document the repo's ``BENCH_*.json`` trajectory files accumulate.
+the JSON document the repo's ``BENCH_*.json`` trajectory files accumulate
+(strict JSON — the regression gate refuses anything less).
 """
 import json
+import math
+import pathlib
 
+import jax.numpy as jnp
 import pytest
 
 from benchmarks import common
 from benchmarks.run import SUITES, main, parse_derived, rows_to_json
 
+REPO = pathlib.Path(__file__).resolve().parent.parent
+METHOD = common.TIMING_METHOD
+
+
+# ---------------------------------------------------------------------------
+# timing helpers
+# ---------------------------------------------------------------------------
+
+def test_block_propagates_device_errors():
+    """Regression (PR 6): ``_block`` used to swallow *every* exception from
+    ``jax.block_until_ready``, so a benchmark whose device computation
+    failed was silently timed as a success. A deleted buffer is the easiest
+    real block-time error to conjure on CPU — it must propagate."""
+    x = jnp.arange(8.0) + 1.0
+    x.delete()
+    with pytest.raises(Exception) as err:
+        common.timeit(lambda: x, warmup=0, iters=1)
+    assert not isinstance(err.value, (AttributeError, TypeError))
+
+
+def test_block_tolerates_host_side_results():
+    # plain host values: nothing to block on, nothing raised
+    assert common.timeit(lambda: [1.0, "host", None], warmup=0, iters=1) >= 0
+    assert common._block(42.0) == 42.0
+
+
+def test_measure_interleaves_and_takes_min():
+    calls = []
+
+    def a():
+        calls.append("a")
+
+    def b():
+        calls.append("b")
+
+    us_a, us_b = common.measure(a, b, warmup=1, reps=3)
+    # warmup a, warmup b, then interleaved rep pairs — never aab/abb runs
+    assert calls == ["a", "b", "a", "b", "a", "b", "a", "b"]
+    assert us_a >= 0 and us_b >= 0
+
+
+def test_timeit_is_measure_of_one():
+    us = common.timeit(lambda: jnp.ones(16).sum(), warmup=1, iters=2)
+    assert math.isfinite(us) and us > 0
+
+
+def test_emit_stamps_timing_method(capsys):
+    before = len(common.ROWS)
+    common.emit("stamped_row", 1.0, qps=2.0)
+    name, us, derived = common.ROWS[before]
+    assert f"method={METHOD}" in derived
+    assert f"stamped_row,1.0,qps=2.0;method={METHOD}" \
+        in capsys.readouterr().out
+    common.emit("explicit_row", 1.0, method="one_shot")
+    assert "method=one_shot" in common.ROWS[before + 1][2]
+    del common.ROWS[before:]
+
+
+# ---------------------------------------------------------------------------
+# derived-field parsing + strict JSON
+# ---------------------------------------------------------------------------
 
 def test_parse_derived_coerces_numbers():
     d = parse_derived("qps=123.5;speedup=2;label=hot;empty=")
     assert d == {"qps": 123.5, "speedup": 2, "label": "hot", "empty": ""}
     assert isinstance(d["speedup"], int)
     assert parse_derived("") == {}
+
+
+def test_parse_derived_edge_cases():
+    # non-finite numbers sanitize to None (strict JSON, gate-comparable)
+    assert parse_derived("qps=nan") == {"qps": None}
+    assert parse_derived("qps=inf;lo=-inf") == {"qps": None, "lo": None}
+    assert parse_derived("qps=Infinity") == {"qps": None}
+    # bools survive as bools, not strings or 1/0
+    assert parse_derived("truncated=True;exact=False") == \
+        {"truncated": True, "exact": False}
+    # scientific notation still parses; stray separators are ignored
+    assert parse_derived(";;qps=1e3;;") == {"qps": 1000.0}
 
 
 def test_rows_to_json_groups_suites_and_parses_derived():
@@ -33,6 +111,21 @@ def test_rows_to_json_groups_suites_and_parses_derived():
     assert doc["suites"]["beta"][0]["qps"] is None
 
 
+def test_rows_to_json_is_strict_json_under_nan_inf():
+    """A zero timing makes a qps division print inf/nan; the document must
+    sanitize those to null so ``json.dump(..., allow_nan=False)`` (what
+    --json uses) and the gate's strict loader both accept it."""
+    doc = rows_to_json(
+        {"s": [("r_nan", float("nan"), "qps=nan;speedup=inf"),
+               ("r_inf", float("inf"), "qps=120.0")]},
+        quick=False)
+    rows = doc["suites"]["s"]
+    assert rows[0]["us_per_call"] is None
+    assert rows[0]["qps"] is None and rows[0]["derived"]["speedup"] is None
+    assert rows[1]["us_per_call"] is None and rows[1]["qps"] == 120.0
+    json.dumps(doc, allow_nan=False)  # must not raise
+
+
 def test_main_writes_json_for_a_suite(tmp_path, monkeypatch, capsys):
     def stub(quick):
         common.emit("stub_metric", 42.0, qps=100.0, speedup=2.5)
@@ -40,23 +133,25 @@ def test_main_writes_json_for_a_suite(tmp_path, monkeypatch, capsys):
 
     monkeypatch.setitem(SUITES, "stub", stub)
     out = tmp_path / "bench.json"
-    main(["--only", "stub", "--json", str(out)])
+    assert main(["--only", "stub", "--json", str(out)]) == 0
     doc = json.loads(out.read_text())
     assert list(doc["suites"]) == ["stub"]
     rows = doc["suites"]["stub"]
     assert [r["name"] for r in rows] == ["stub_metric", "stub_other"]
     assert rows[0]["qps"] == 100.0
     assert rows[0]["derived"]["speedup"] == 2.5
+    assert rows[0]["derived"]["method"] == METHOD
     assert doc["config"]["quick"] is False
     # the CSV contract on stdout is unchanged by --json
-    assert "stub_metric,42.0,qps=100.0;speedup=2.5" in capsys.readouterr().out
+    assert f"stub_metric,42.0,qps=100.0;speedup=2.5;method={METHOD}" \
+        in capsys.readouterr().out
 
 
 def test_main_only_is_repeatable(monkeypatch):
     calls = []
     monkeypatch.setitem(SUITES, "stub1", lambda quick: calls.append("stub1"))
     monkeypatch.setitem(SUITES, "stub2", lambda quick: calls.append("stub2"))
-    main(["--only", "stub1", "--only", "stub2"])
+    assert main(["--only", "stub1", "--only", "stub2"]) == 0
     assert calls == ["stub1", "stub2"]
 
 
@@ -90,3 +185,38 @@ def test_drift_sweep_records_in_trajectory_schema(tmp_path, monkeypatch):
     assert rows[1]["derived"]["speedup"] == 2.0
     assert rows[1]["derived"]["resummarizes"] == 16
     assert rows[0]["derived"]["sel_ratio"] == 0.11
+
+
+# ---------------------------------------------------------------------------
+# committed trajectory baselines
+# ---------------------------------------------------------------------------
+
+def test_committed_baselines_are_strict_and_well_formed():
+    """Every ``BENCH_*.json`` in the repo root must load through the gate's
+    strict validator — a baseline with NaN/Infinity or malformed rows would
+    poison every future ``--check`` run."""
+    from benchmarks import check
+    baselines = sorted(REPO.glob("BENCH_*.json"))
+    assert baselines, "no committed BENCH_*.json trajectory files"
+    for path in baselines:
+        doc = check.load_trajectory(str(path))       # raises on bad input
+        assert doc.get("schema") == 1, path.name
+        assert isinstance(doc.get("config"), dict), path.name
+
+
+def test_latest_committed_baseline_covers_every_registered_suite():
+    """The newest baseline is what ``--check`` gates against, so every
+    registered suite must appear in it with at least one gated row
+    (``scripts/check_bench.py --coverage`` is the CLI twin) — a new bench
+    that never emits qps/achieved_gbps cannot dodge the gate."""
+    from benchmarks import check
+    latest = sorted(REPO.glob("BENCH_*.json"))[-1]
+    doc = check.load_trajectory(str(latest))
+    assert check.coverage_problems(doc, set(SUITES)) == [], latest.name
+    # the kernel rows specifically carry the roofline statement
+    kernel_rows = doc["suites"]["kernels"]
+    assert len(kernel_rows) == 5
+    for row in kernel_rows:
+        assert row["derived"]["achieved_gbps"] > 0, row["name"]
+        assert row["derived"]["roofline_frac"] > 0, row["name"]
+        assert row["derived"]["method"] == METHOD, row["name"]

@@ -1,0 +1,334 @@
+"""Regression-gate tests: ``benchmarks/check.py`` fed synthetic
+baseline/current trajectory pairs, the ``scripts/check_bench.py`` CLI, the
+``benchmarks.run --check`` wiring, and (behind the ``bench`` marker) the
+real quick-mode gate against the committed ``BENCH_*.json`` baseline."""
+import json
+import pathlib
+import sys
+
+import pytest
+
+from benchmarks import check
+from benchmarks import common
+from benchmarks.run import SUITES, main
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "scripts"))
+
+import check_bench  # noqa: E402
+
+
+def doc(suites, quick=True):
+    """Minimal trajectory document around {suite: [(name, us, derived)]}."""
+    return {
+        "schema": 1,
+        "config": {"quick": quick},
+        "suites": {
+            suite: [{"name": name, "us_per_call": us, "derived": derived,
+                     "qps": derived.get("qps")}
+                    for name, us, derived in rows]
+            for suite, rows in suites.items()
+        },
+    }
+
+
+BASE = doc({
+    "engine": [("engine_q64", 100.0, {"qps": 640.0}),
+               ("engine_q8", 50.0, {"qps": 160.0})],
+    "kernels": [("kernel_bitmap_and", 1500.0,
+                 {"achieved_gbps": 2.5, "roofline_frac": 0.2})],
+})
+
+
+def test_identical_run_passes():
+    deltas = check.compare(BASE, BASE)
+    assert [d.status for d in deltas] == ["ok"] * 3
+    assert check.failures(deltas) == []
+
+
+def test_small_drop_within_tolerance_passes():
+    cur = doc({"engine": [("engine_q64", 110.0, {"qps": 580.0}),
+                          ("engine_q8", 50.0, {"qps": 160.0})],
+               "kernels": [("kernel_bitmap_and", 1500.0,
+                            {"achieved_gbps": 2.1})]})
+    assert check.failures(check.compare(BASE, cur)) == []
+
+
+def test_qps_drop_past_tolerance_fails():
+    cur = doc({"engine": [("engine_q64", 300.0, {"qps": 213.0}),
+                          ("engine_q8", 50.0, {"qps": 160.0})],
+               "kernels": [("kernel_bitmap_and", 1500.0,
+                            {"achieved_gbps": 2.5})]})
+    bad = check.failures(check.compare(BASE, cur))
+    assert [(d.suite, d.name, d.field) for d in bad] == \
+        [("engine", "engine_q64", "qps")]
+    assert bad[0].drop_frac == pytest.approx(1 - 213 / 640)
+
+
+def test_gbps_drop_past_tolerance_fails():
+    cur = doc({"engine": [("engine_q64", 100.0, {"qps": 640.0}),
+                          ("engine_q8", 50.0, {"qps": 160.0})],
+               "kernels": [("kernel_bitmap_and", 4000.0,
+                            {"achieved_gbps": 0.9})]})
+    bad = check.failures(check.compare(BASE, cur))
+    assert [(d.name, d.field) for d in bad] == \
+        [("kernel_bitmap_and", "achieved_gbps")]
+
+
+def test_improvement_passes():
+    cur = doc({"engine": [("engine_q64", 50.0, {"qps": 1280.0}),
+                          ("engine_q8", 25.0, {"qps": 320.0})],
+               "kernels": [("kernel_bitmap_and", 700.0,
+                            {"achieved_gbps": 5.0})]})
+    assert check.failures(check.compare(BASE, cur)) == []
+
+
+def test_partial_only_run_skips_missing_suite():
+    """A --only kernels run must gate kernels and skip (not fail) engine."""
+    cur = doc({"kernels": [("kernel_bitmap_and", 1500.0,
+                            {"achieved_gbps": 2.5})]})
+    deltas = check.compare(BASE, cur)
+    assert check.failures(deltas) == []
+    skipped = [d for d in deltas if d.status == "skipped"]
+    assert {(d.suite, d.name) for d in skipped} == \
+        {("engine", "engine_q64"), ("engine", "engine_q8")}
+
+
+def test_new_suite_and_new_row_pass():
+    cur = doc({"engine": [("engine_q64", 100.0, {"qps": 640.0}),
+                          ("engine_q8", 50.0, {"qps": 160.0}),
+                          ("engine_q256", 400.0, {"qps": 640.0})],
+               "kernels": [("kernel_bitmap_and", 1500.0,
+                            {"achieved_gbps": 2.5})],
+               "soak": [("soak_1m", 9.0, {"qps": 111.0})]})
+    deltas = check.compare(BASE, cur)
+    assert check.failures(deltas) == []
+    assert {(d.suite, d.name) for d in deltas if d.status == "new"} == \
+        {("engine", "engine_q256"), ("soak", "soak_1m")}
+
+
+def test_vanished_gated_metric_fails():
+    """The row still runs but no longer reports qps (or it went non-finite
+    and was sanitized to null) — that hides a regression, so it IS one."""
+    cur = doc({"engine": [("engine_q64", 100.0, {"qps": None}),
+                          ("engine_q8", 50.0, {"qps": 160.0})],
+               "kernels": [("kernel_bitmap_and", 1500.0,
+                            {"achieved_gbps": 2.5})]})
+    bad = check.failures(check.compare(BASE, cur))
+    assert [(d.name, d.field, d.cur) for d in bad] == \
+        [("engine_q64", "qps", None)]
+
+
+def test_row_tolerance_override_bare_and_qualified():
+    cur = doc({"engine": [("engine_q64", 300.0, {"qps": 400.0}),
+                          ("engine_q8", 50.0, {"qps": 160.0})],
+               "kernels": [("kernel_bitmap_and", 1500.0,
+                            {"achieved_gbps": 2.5})]})
+    assert check.failures(check.compare(BASE, cur))  # default 20%: fails
+    for key in ("engine_q64", "engine/engine_q64"):
+        deltas = check.compare(BASE, cur, row_tolerance={key: 0.5})
+        assert check.failures(deltas) == [], key
+    # qualified key wins over bare
+    deltas = check.compare(BASE, cur, row_tolerance={
+        "engine_q64": 0.5, "engine/engine_q64": 0.1})
+    assert check.failures(deltas)
+
+
+def test_default_row_tolerances_apply_and_caller_wins():
+    """Known-noisy rows ship a committed loose tolerance; any caller key —
+    bare (merged over the default) or qualified — takes precedence."""
+    assert check.DEFAULT_ROW_TOLERANCES["drift_adaptive"] > \
+        check.DEFAULT_TOLERANCE
+    base = doc({"drift": [("drift_adaptive", 50.0, {"qps": 1000.0})]})
+    cur = doc({"drift": [("drift_adaptive", 90.0, {"qps": 560.0})]})
+    # a 44% drop passes under the committed 55% default...
+    assert check.failures(check.compare(base, cur, tolerance=0.2)) == []
+    # ...but the caller can still tighten it, with either key shape
+    for key in ("drift_adaptive", "drift/drift_adaptive"):
+        deltas = check.compare(base, cur, row_tolerance={key: 0.2})
+        assert check.failures(deltas), key
+
+
+def test_merge_bench_takes_elementwise_floor(tmp_path):
+    """The committed baseline is the slowest-of-N merge: min of each gated
+    metric, max us_per_call — a lucky-fast single sweep must not become the
+    bar every honest run gets compared against."""
+    import merge_bench
+    a = doc({"s": [("r", 10.0, {"qps": 1000.0, "note": "x"})]})
+    b = doc({"s": [("r", 14.0, {"qps": 800.0}), ("extra", 1.0, {"qps": 5.0})]})
+    merged = merge_bench.merge([a, b])
+    row = merged["suites"]["s"][0]
+    assert row["us_per_call"] == 14.0
+    assert row["qps"] == 800.0 and row["derived"]["qps"] == 800.0
+    assert row["derived"]["note"] == "x"        # non-gated fields kept
+    assert merged["config"]["merged_of"] == 2
+    # rows beyond the first document are dropped (first run is the spine)
+    assert [r["name"] for r in merged["suites"]["s"]] == ["r"]
+    # CLI round trip through the strict loader
+    pa, pb, out = tmp_path / "a.json", tmp_path / "b.json", tmp_path / "m.json"
+    pa.write_text(json.dumps(a)), pb.write_text(json.dumps(b))
+    assert merge_bench.main([str(pa), str(pb), "-o", str(out)]) == 0
+    assert check.load_trajectory(str(out))["config"]["merged_of"] == 2
+
+
+def test_parse_row_tolerances():
+    assert check.parse_row_tolerances(["a=0.5", "s/b=0.1"]) == \
+        {"a": 0.5, "s/b": 0.1}
+    assert check.parse_row_tolerances([]) == {}
+    with pytest.raises(ValueError):
+        check.parse_row_tolerances(["nonsense"])
+    with pytest.raises(ValueError):
+        check.parse_row_tolerances(["a=notafloat"])
+
+
+def test_boolean_derived_is_not_gated():
+    """bools must not be treated as numeric gated values."""
+    base = doc({"s": [("r", 1.0, {"qps": True})]})
+    cur = doc({"s": [("r", 1.0, {"qps": False})]})
+    assert check.compare(base, cur) == []
+
+
+def test_load_trajectory_rejects_malformed(tmp_path):
+    p = tmp_path / "bad.json"
+    p.write_text("{not json")
+    with pytest.raises(check.BaselineError):
+        check.load_trajectory(str(p))
+    p.write_text(json.dumps({"schema": 1}))           # no suites map
+    with pytest.raises(check.BaselineError):
+        check.load_trajectory(str(p))
+    p.write_text(json.dumps({"suites": {"s": [{"name": "r"}]}}))  # no us
+    with pytest.raises(check.BaselineError):
+        check.load_trajectory(str(p))
+    with pytest.raises(check.BaselineError):
+        check.load_trajectory(str(tmp_path / "missing.json"))
+
+
+def test_load_trajectory_rejects_nan_constants(tmp_path):
+    """A baseline with a literal NaN must be refused, not compared: NaN
+    comparisons are neither pass nor fail."""
+    p = tmp_path / "nan.json"
+    p.write_text('{"suites": {"s": [{"name": "r", "us_per_call": NaN}]}}')
+    with pytest.raises(check.BaselineError, match="non-strict"):
+        check.load_trajectory(str(p))
+
+
+def test_delta_table_reports_every_row_and_summary():
+    cur = doc({"engine": [("engine_q64", 300.0, {"qps": 213.0}),
+                          ("engine_q8", 50.0, {"qps": 160.0})],
+               "kernels": [("kernel_bitmap_and", 1500.0,
+                            {"achieved_gbps": 2.5})]})
+    table = check.delta_table(check.compare(BASE, cur))
+    assert "engine/engine_q64" in table and "FAIL" in table
+    assert "-66.7%" in table
+    assert "1 fail" in table and "2 ok" in table
+    quiet = check.delta_table(check.compare(BASE, cur), verbose=False)
+    assert "engine_q8" not in quiet and "FAIL" in quiet
+
+
+def test_coverage_problems():
+    full = doc({"engine": [("e", 1.0, {"qps": 2.0})],
+                "cost_model": [("c", 0.0, {"estimated": 5})]})
+    assert check.coverage_problems(full, {"engine", "cost_model"}) == []
+    # registered suite absent from the trajectory
+    probs = check.coverage_problems(full, {"engine", "cost_model", "soak"})
+    assert len(probs) == 1 and "soak" in probs[0]
+    # timed suite without any gated row
+    dodgy = doc({"engine": [("e", 1.0, {"speedup": 2.0})]})
+    probs = check.coverage_problems(dodgy, {"engine"})
+    assert len(probs) == 1 and "dodge" in probs[0]
+    # untimed (model-only) suites are exempt
+    assert check.coverage_problems(
+        doc({"cost_model": [("c", 0.0, {"estimated": 5})]}),
+        {"cost_model"}) == []
+
+
+# ---------------------------------------------------------------------------
+# CLI + run.py wiring
+# ---------------------------------------------------------------------------
+
+def _write(tmp_path, name, document):
+    p = tmp_path / name
+    p.write_text(json.dumps(document))
+    return str(p)
+
+
+def test_check_bench_cli_pass_fail_malformed(tmp_path, capsys):
+    base = _write(tmp_path, "base.json", BASE)
+    good = _write(tmp_path, "good.json", BASE)
+    assert check_bench.main([base, good]) == 0
+    bad_doc = doc({"engine": [("engine_q64", 300.0, {"qps": 213.0})],
+                   "kernels": [("kernel_bitmap_and", 1500.0,
+                                {"achieved_gbps": 2.5})]})
+    bad = _write(tmp_path, "bad.json", bad_doc)
+    assert check_bench.main([base, bad]) == 1
+    out = capsys.readouterr().out
+    assert "engine/engine_q64" in out and "FAIL" in out
+    malformed = _write(tmp_path, "malformed.json", {"schema": 1})
+    assert check_bench.main([malformed, good]) == 2
+    assert check_bench.main([base, bad, "--row-tolerance",
+                             "engine_q64=0.9"]) == 0
+
+
+def test_check_bench_cli_coverage(tmp_path, capsys):
+    """--coverage audits a trajectory against the real registry."""
+    rows = {suite: [(f"{suite}_row", 1.0, {"qps": 10.0})] for suite in SUITES}
+    full = _write(tmp_path, "full.json", doc(rows))
+    assert check_bench.main([full, "--coverage"]) == 0
+    del rows["kernels"]
+    partial = _write(tmp_path, "partial.json", doc(rows))
+    assert check_bench.main([partial, "--coverage"]) == 1
+    assert "kernels" in capsys.readouterr().out
+
+
+def test_run_main_check_gates_stub_suite(tmp_path, monkeypatch, capsys):
+    qps = {"val": 100.0}
+
+    def stub(quick):
+        common.emit("stub_metric", 42.0, qps=qps["val"])
+
+    monkeypatch.setitem(SUITES, "stub", stub)
+    base = tmp_path / "base.json"
+    assert main(["--only", "stub", "--json", str(base)]) == 0
+
+    # same speed: gate passes
+    assert main(["--only", "stub", "--check", str(base)]) == 0
+    # artificially slowed: gate fails with a per-row delta report
+    qps["val"] = 10.0
+    assert main(["--only", "stub", "--check", str(base)]) == 1
+    assert "stub/stub_metric" in capsys.readouterr().out
+    # ... unless this row is allowed to be that noisy
+    assert main(["--only", "stub", "--check", str(base),
+                 "--row-tolerance", "stub_metric=0.95"]) == 0
+    # malformed baseline: distinct exit code, no benches run
+    bad = tmp_path / "bad.json"
+    bad.write_text("{}")
+    assert main(["--only", "stub", "--check", str(bad)]) == 2
+
+
+# ---------------------------------------------------------------------------
+# the real thing (bench tier): quick kernels run vs committed baseline
+# ---------------------------------------------------------------------------
+
+@pytest.mark.bench
+def test_quick_gate_against_committed_baseline(tmp_path, capsys):
+    """End-to-end: a fresh quick kernels-suite run must gate cleanly against
+    the committed BENCH_*.json. Tolerance is looser than the CLI default —
+    this tier proves the wiring and catches gross regressions; CI boxes are
+    noisy neighbors."""
+    baselines = sorted(REPO.glob("BENCH_*.json"))
+    assert baselines, "no committed BENCH_*.json trajectory in the repo root"
+    with_kernels = [p for p in baselines
+                    if "kernels" in json.loads(p.read_text())["suites"]]
+    assert with_kernels, "no committed baseline covers the kernels suite"
+    out = tmp_path / "fresh.json"
+    rc = main(["--quick", "--only", "kernels", "--json", str(out),
+               "--check", str(with_kernels[-1]), "--tolerance", "0.5"])
+    report = capsys.readouterr().out
+    assert rc == 0, f"quick kernels gate regressed:\n{report}"
+    # all five kernels reported, each with the roofline fields
+    fresh = json.loads(out.read_text())
+    rows = {r["name"]: r for r in fresh["suites"]["kernels"]}
+    assert len(rows) == 5
+    for name, row in rows.items():
+        assert row["derived"]["achieved_gbps"] > 0, name
+        assert row["derived"]["roofline_frac"] > 0, name
