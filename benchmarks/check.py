@@ -33,6 +33,14 @@ DEFAULT_ROW_TOLERANCES = {
     # suite-qualified (checked first) — takes precedence
     "drift_no_resummarize": 0.55,
     "drift_adaptive": 0.55,
+    # learned-summary A/B rows: same engine run_all timing loops as the
+    # drift pair, same process-state bimodality at quick scale
+    "learned_zipf_equal_mass": 0.5,
+    "learned_zipf_learned": 0.5,
+    "learned_lognormal_equal_mass": 0.5,
+    "learned_lognormal_learned": 0.5,
+    "learned_drift_equal_mass": 0.5,
+    "learned_drift_learned": 0.5,
     "sweep_dense_sel0.5": 0.4,
     "sweep_compact_sel0.5": 0.6,
     "sweep_compact_sel0.01": 0.4,

@@ -36,6 +36,7 @@ from benchmarks import (
     bench_fig9_resolution,
     bench_fig10_tpch,
     bench_kernels,
+    bench_learned,
     bench_maintenance,
     bench_selectivity_sweep,
     bench_shard_scaling,
@@ -82,6 +83,11 @@ REGISTRY = {
                   card=10_000 if quick else bench_drift.CARD,
                   rounds=3 if quick else bench_drift.ROUNDS,
                   inserts=600 if quick else bench_drift.INSERTS)),
+    "learned": (bench_learned,
+                lambda quick: bench_learned.run(
+                    card=10_000 if quick else bench_learned.CARD,
+                    rounds=2 if quick else bench_learned.ROUNDS,
+                    inserts=1200 if quick else bench_learned.INSERTS)),
 }
 
 MODULES = {name: mod for name, (mod, _) in REGISTRY.items()}

@@ -27,13 +27,11 @@ from repro.core.predicate import (Predicate, intervals, to_bucket_bitmap,
 from repro.storage.table import PagedTable
 
 
-def sample_histogram(table: PagedTable, resolution: int,
-                     sample_size: int = 65536) -> hg.Histogram:
-    """The DBMS-maintained complete histogram, sampled from the table (§4.1).
-
-    Shared by the unsharded and sharded CREATE INDEX paths so the sampling
-    policy (live-tuple mask, fixed seed, cap) has one definition.
-    """
+def sample_keys(table: PagedTable, sample_size: int = 65536) -> np.ndarray:
+    """The CREATE INDEX build sample: live tuples, capped at ``sample_size``
+    by a fixed-seed uniform draw. One definition of the sampling policy so
+    every summary policy (equal-mass quantiles, learned CDF) fits the same
+    sample."""
     if table.num_pages == 0:
         raise ValueError(
             "empty table: pass an explicit hist (the complete histogram "
@@ -42,7 +40,17 @@ def sample_histogram(table: PagedTable, resolution: int,
     if live.size > sample_size:
         rng = np.random.default_rng(0)
         live = rng.choice(live, size=sample_size, replace=False)
-    return hg.build(jnp.asarray(live), resolution)
+    return live
+
+
+def sample_histogram(table: PagedTable, resolution: int,
+                     sample_size: int = 65536) -> hg.Histogram:
+    """The DBMS-maintained complete histogram, sampled from the table (§4.1).
+
+    Shared by the unsharded and sharded CREATE INDEX paths so the sampling
+    policy (live-tuple mask, fixed seed, cap) has one definition.
+    """
+    return hg.build(jnp.asarray(sample_keys(table, sample_size)), resolution)
 
 
 @dataclass

@@ -54,19 +54,17 @@ class Histogram:
 def build(sample: jnp.ndarray, resolution: int) -> Histogram:
     """Build an equi-depth histogram with ``resolution`` buckets from a sample.
 
-    Boundaries are the (i/H)-quantiles of the sample. Duplicate boundaries are
-    nudged apart so every bucket is non-degenerate (ties happen on low-
-    cardinality integer attributes).
+    Boundaries are the (i/H)-quantiles of the sample, finalized by
+    ``strict_float32_bounds`` so ties are nudged apart and every bucket is
+    non-degenerate even where the epsilon ladder collapses below the float32
+    ulp (large-magnitude keys, low-cardinality integer attributes) — the
+    same finalizer every other boundary producer (``rebuild``, the learned
+    materialization) runs through.
     """
     sample = jnp.asarray(sample, jnp.float32).ravel()
     qs = jnp.linspace(0.0, 1.0, resolution + 1)
-    bounds = jnp.quantile(sample, qs)
-    # Enforce strict monotonicity: cumulative-max then epsilon-separate ties.
-    bounds = jax.lax.cummax(bounds)
-    span = jnp.maximum(bounds[-1] - bounds[0], 1.0)
-    eps = span * 1e-6
-    steps = jnp.arange(resolution + 1, dtype=jnp.float32) * eps
-    return Histogram(bounds=(bounds + steps).astype(jnp.float32))
+    bounds = np.asarray(jnp.quantile(sample, qs), np.float64)
+    return Histogram(bounds=jnp.asarray(strict_float32_bounds(bounds)))
 
 
 def build_uniform(lo: float, hi: float, resolution: int) -> Histogram:
@@ -94,10 +92,24 @@ def hit_bucket_range(hist: Histogram, lo, hi) -> tuple[jnp.ndarray, jnp.ndarray]
     A bucket is *hit* if the predicate fully contains, overlaps, or is fully
     contained by the bucket (§3.1). For an interval predicate against sorted
     boundaries this is exactly the buckets of the two endpoints.
+
+    A predicate entirely outside the summary domain (``hi < bounds[0]`` or
+    ``lo > bounds[-1]``), or an empty one (``lo > hi``), returns the empty
+    bucket range ``(1, 0)`` (b_lo > b_hi) instead of clamping both endpoints
+    into an edge bucket: clamping would spuriously select every page
+    summarized under that edge bucket for a query that provably matches no
+    in-domain tuple. (The hot-path conversion ``predicate.interval_bitmaps``
+    deliberately keeps the clamp — drifted tuples clamp into edge buckets at
+    insert time, §4.1, so out-of-domain *selection* must still reach them;
+    this helper reports the histogram-domain hit range only.)
     """
-    b_lo = bucketize(hist, jnp.asarray(lo, jnp.float32)[None])[0]
-    b_hi = bucketize(hist, jnp.asarray(hi, jnp.float32)[None])[0]
-    return b_lo, b_hi
+    lo_f = jnp.asarray(lo, jnp.float32)
+    hi_f = jnp.asarray(hi, jnp.float32)
+    b_lo = bucketize(hist, lo_f[None])[0]
+    b_hi = bucketize(hist, hi_f[None])[0]
+    outside = (hi_f < hist.bounds[0]) | (lo_f > hist.bounds[-1]) | (lo_f > hi_f)
+    return (jnp.where(outside, jnp.int32(1), b_lo),
+            jnp.where(outside, jnp.int32(0), b_hi))
 
 
 def host_bounds(hist: Histogram) -> np.ndarray:
@@ -143,7 +155,17 @@ class DriftTracker:
         self._rng = np.random.default_rng(self._seed)
 
     def observe(self, values) -> None:
-        """Fold a batch (or scalar) of inserted values into the telemetry."""
+        """Fold a batch (or scalar) of inserted values into the telemetry.
+
+        Fully vectorized — one ``searchsorted`` for the counters and one
+        batched algorithm-R admission for the reservoir — so a per-row
+        insert stream can coalesce its observations into array calls
+        instead of paying a Python loop iteration per value. The batched
+        admission draws each value's slot against its own running count
+        (identical per-value admission probability to the scalar loop) and
+        applies them with a single fancy assignment, whose last-wins
+        overwrite order matches sequential application.
+        """
         vals = np.asarray(values, np.float32).ravel()
         if vals.size == 0:
             return
@@ -152,15 +174,22 @@ class DriftTracker:
         np.add.at(self.hits, ids, 1)
         self.out_of_range += int(((vals < self._bounds[0])
                                   | (vals >= self._bounds[-1])).sum())
-        for v in vals:
-            self.observed += 1
-            if self._res_fill < self.reservoir.size:
-                self.reservoir[self._res_fill] = v
-                self._res_fill += 1
-            else:
-                j = int(self._rng.integers(0, self.observed))
-                if j < self.reservoir.size:
-                    self.reservoir[j] = v
+        start = self.observed
+        self.observed += vals.size
+        # fill the reservoir's empty prefix directly ...
+        take = min(self.reservoir.size - self._res_fill, vals.size)
+        if take > 0:
+            self.reservoir[self._res_fill: self._res_fill + take] = vals[:take]
+            self._res_fill += take
+        rest = vals[take:]
+        if rest.size == 0:
+            return
+        # ... then admit the overflow: value k (1-based running count c_k)
+        # replaces a uniform slot j ~ [0, c_k) when j lands in the reservoir
+        counts = start + take + 1 + np.arange(rest.size, dtype=np.int64)
+        j = self._rng.integers(0, counts)
+        admit = j < self.reservoir.size
+        self.reservoir[j[admit]] = rest[admit]
 
     @property
     def armed_histogram(self) -> Histogram:
@@ -178,6 +207,30 @@ class DriftTracker:
     def sample(self) -> np.ndarray:
         """Copy of the reservoir's filled prefix (<= reservoir_size values)."""
         return self.reservoir[: self._res_fill].copy()
+
+
+def strict_float32_bounds(bounds: np.ndarray) -> np.ndarray:
+    """Finalize a nondecreasing boundary array into strictly increasing
+    float32 bounds (the invariant every summary swap validates).
+
+    Cumulative-max first (tolerating small non-monotone wobbles from
+    interpolation), then an epsilon ladder proportional to the span, then —
+    because for large-magnitude, narrow-span keys that epsilon collapses
+    below the float32 ulp and a remap drain would refuse tied bounds
+    forever — residual ties are separated by whole float32 ulps (H is a few
+    hundred: the host loop is free). Shared by ``rebuild`` and the learned
+    boundary materialization (``core.learned.boundaries``) so every policy
+    that can feed ``writer._drain_resummarize`` produces bounds that pass
+    its strictness check.
+    """
+    b = np.maximum.accumulate(np.asarray(bounds, np.float64).ravel())
+    span = max(float(b[-1] - b[0]), 1.0)
+    b = b + np.arange(b.size, dtype=np.float64) * (span * 1e-6)
+    b32 = b.astype(np.float32)
+    for i in range(1, b32.size):
+        if b32[i] <= b32[i - 1]:
+            b32[i] = np.nextafter(b32[i - 1], np.float32(np.inf))
+    return b32
 
 
 def rebuild(hist: Histogram, sample: np.ndarray, resolution: int | None = None,
@@ -215,15 +268,4 @@ def rebuild(hist: Histogram, sample: np.ndarray, resolution: int | None = None,
     bounds = np.interp(qs, cum, pts)
     bounds[0] = pts[0]          # edges cover the full blended range
     bounds[-1] = pts[-1]
-    bounds = np.maximum.accumulate(bounds)
-    span = max(float(bounds[-1] - bounds[0]), 1.0)
-    bounds = bounds + np.arange(resolution + 1, dtype=np.float64) * (span * 1e-6)
-    # Strictness must survive the float32 cast: for large-magnitude, narrow-
-    # span keys the epsilon above collapses below the float32 ulp, and a
-    # remap drain would refuse tied bounds forever. Separate residual ties
-    # by whole float32 ulps (H is a few hundred: the host loop is free).
-    b32 = bounds.astype(np.float32)
-    for i in range(1, b32.size):
-        if b32[i] <= b32[i - 1]:
-            b32[i] = np.nextafter(b32[i - 1], np.float32(np.inf))
-    return Histogram(bounds=jnp.asarray(b32))
+    return Histogram(bounds=jnp.asarray(strict_float32_bounds(bounds)))

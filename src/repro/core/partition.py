@@ -57,10 +57,20 @@ import jax.numpy as jnp
 from repro.core import bitmap as bm
 from repro.core import histogram as hg
 from repro.core import index as hix
-from repro.core.hippo import MaintenanceCounters, sample_histogram
+from repro.core import learned as ln
+from repro.core.hippo import MaintenanceCounters, sample_histogram, sample_keys
 from repro.core.predicate import (Predicate, intervals,
                                   interval_bitmaps_sharded, to_bucket_bitmaps)
 from repro.storage.table import PagedTable
+
+# Summary-policy ladder: how a boundary set is produced, at build time and at
+# every drift refit. "equal_mass" is the paper's equi-depth quantile summary
+# (``histogram.build``/``rebuild``) and the fallback/oracle; "learned" fits an
+# error-bounded piecewise-linear CDF (``core.learned``) and materializes its
+# boundaries — same Histogram type, same downstream stack, better placement on
+# skewed/drifting keys. The policy is a property of the *index* (it governs
+# every shard's bounds), consumed by ``runtime.writer.schedule_resummarize``.
+SUMMARY_POLICIES = ("equal_mass", "learned")
 
 
 @dataclass(frozen=True)
@@ -181,10 +191,23 @@ class ShardedHippoIndex:
     # predicate conversion (``_query_bitmaps``); epochs diverge only while a
     # re-summarization is partially drained.
     bounds_epochs: np.ndarray = field(default=None, repr=False, compare=False)
+    # Summary policy (see SUMMARY_POLICIES): consulted by the writer at every
+    # ``schedule_resummarize`` to pick the boundary builder for the refit.
+    summary: str = "equal_mass"
+    # Per-shard learned model (``learned.PiecewiseLinearModel``) whose
+    # boundaries shard s currently serves; None under equal-mass bounds or
+    # after a degenerate-sample fallback. Recorded by the writer drain at the
+    # same moment it bumps ``bounds_epochs[s]``.
+    summary_models: list = field(default=None, repr=False, compare=False)
 
     def __post_init__(self):
         if self.bounds_epochs is None:
             self.bounds_epochs = np.zeros((self.spec.num_shards,), np.int64)
+        if self.summary not in SUMMARY_POLICIES:
+            raise ValueError(f"summary must be one of {SUMMARY_POLICIES}, "
+                             f"got {self.summary!r}")
+        if self.summary_models is None:
+            self.summary_models = [None] * self.spec.num_shards
 
     # -- creation ------------------------------------------------------------
 
@@ -193,9 +216,13 @@ class ShardedHippoIndex:
                density: float = 0.2, pages_per_shard: int | None = None,
                max_slots: int | None = None, sample_size: int = 65536,
                relocate_on_update: bool = True,
-               hist: hg.Histogram | None = None) -> "ShardedHippoIndex":
+               hist: hg.Histogram | None = None,
+               summary: str = "equal_mass") -> "ShardedHippoIndex":
         if num_shards < 1:
             raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        if summary not in SUMMARY_POLICIES:
+            raise ValueError(f"summary must be one of {SUMMARY_POLICIES}, "
+                             f"got {summary!r}")
         if pages_per_shard is None:
             # slab headroom mirrors HippoIndex.create's slot headroom: 25%
             # growth room plus a fixed floor so tiny tables can still insert
@@ -213,10 +240,19 @@ class ShardedHippoIndex:
         cfg = hix.HippoConfig(resolution=resolution, density=density,
                               page_card=table.page_card, max_slots=max_slots,
                               relocate_on_update=relocate_on_update)
+        model = None
         if hist is None:
-            hist = sample_histogram(table, resolution, sample_size)
+            if summary == "learned":
+                # same build sample as the equal-mass path, fit instead of
+                # quantiled; a degenerate sample falls back inside
+                hist, model = ln.build_histogram(
+                    sample_keys(table, sample_size), resolution)
+            else:
+                hist = sample_histogram(table, resolution, sample_size)
         state = build_sharded(cfg, spec, hist, table)
-        return ShardedHippoIndex(cfg=cfg, spec=spec, state=state, table=table)
+        return ShardedHippoIndex(cfg=cfg, spec=spec, state=state, table=table,
+                                 summary=summary,
+                                 summary_models=[model] * num_shards)
 
     # -- device views --------------------------------------------------------
 

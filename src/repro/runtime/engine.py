@@ -106,6 +106,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.core.partition import SUMMARY_POLICIES
 from repro.core.predicate import Predicate
 from repro.runtime.writer import MaintenanceWriter
 
@@ -171,6 +172,8 @@ class EngineStats:
     # -- drift re-summarization ----------------------------------------------
     resummarizes: int = 0            # shard remap units drained
     edge_overflow_ratio: float = 0.0  # writer drift telemetry, live value
+    learned_refits: int = 0          # resummarize schedules served by a learned fit
+    learned_fallbacks: int = 0       # learned schedules that fell back to equal-mass
     # selected-page ratio of the compact batches before the last resummarize
     # was scheduled; the matching "after" window accumulates below
     pruning_before_resummarize: float = 0.0
@@ -263,6 +266,15 @@ class QueryEngine:
     remap unit per shard, drained by the normal policy).
     ``drift_threshold=None`` or ``auto_resummarize=False`` disables the
     automatic trigger; ``resummarize()`` stays available either way.
+
+    ``summary`` overrides the boundary policy every re-summarization this
+    engine schedules uses (``core.partition.SUMMARY_POLICIES``:
+    ``"equal_mass"`` quantiles or the ``"learned"`` piecewise-linear CDF
+    fit, which falls back to equal-mass on degenerate samples); ``None``
+    (default) defers to the index's own ``summary`` attribute, so an index
+    created with ``summary="learned"`` keeps learned bounds across refits
+    with no engine configuration. ``EngineStats.learned_refits`` /
+    ``learned_fallbacks`` report which path the schedules actually took.
     """
 
     def __init__(self, index, batch: int = 64, sharded: bool | None = None,
@@ -273,7 +285,8 @@ class QueryEngine:
                  compact_bucket: int | None = None,
                  drift_threshold: float | None = 0.25,
                  auto_resummarize: bool = True,
-                 drift_min_observed: int = 256):
+                 drift_min_observed: int = 256,
+                 summary: str | None = None):
         if batch < 1:
             raise ValueError(f"batch must be >= 1, got {batch}")
         self.index = index
@@ -339,6 +352,10 @@ class QueryEngine:
         self.drift_threshold = drift_threshold
         self.auto_resummarize = auto_resummarize
         self.drift_min_observed = drift_min_observed
+        if summary is not None and summary not in SUMMARY_POLICIES:
+            raise ValueError(f"summary must be one of {SUMMARY_POLICIES} or "
+                             f"None (the index's policy), got {summary!r}")
+        self.summary = summary
         self.slots: list[QueryTicket | None] = [None] * batch
         self.queue: deque[QueryTicket] = deque()
         self.stats = EngineStats()
@@ -427,8 +444,9 @@ class QueryEngine:
                 "resummarize needs a writer-backed engine (an async "
                 "drain_policy on a ShardedHippoIndex)")
         before = self.writer.stats.resummarizes
-        self.writer.schedule_resummarize(bounds)   # may refuse (no sample):
-        self._mark_resummarize_window()            # ...then stats stay intact
+        # may refuse (no sample): then stats stay intact
+        self.writer.schedule_resummarize(bounds, policy=self.summary)
+        self._mark_resummarize_window()
         self._drain(None)
         return self.writer.stats.resummarizes - before
 
@@ -451,7 +469,8 @@ class QueryEngine:
         d = w.drift
         if (d.observed >= self.drift_min_observed
                 and d.edge_overflow_ratio >= self.drift_threshold):
-            w.schedule_resummarize()       # observed > 0: the reservoir holds
+            # observed > 0: the reservoir holds at least one value
+            w.schedule_resummarize(policy=self.summary)
             self._mark_resummarize_window()
 
     def _mark_resummarize_window(self) -> None:
@@ -484,6 +503,8 @@ class QueryEngine:
         st.peak_queue_depth = max(st.peak_queue_depth, w.queue_depth)
         st.resummarizes = w.stats.resummarizes
         st.edge_overflow_ratio = w.drift.edge_overflow_ratio
+        st.learned_refits = w.stats.learned_refits
+        st.learned_fallbacks = w.stats.learned_fallbacks
 
     # -- execution ------------------------------------------------------------
 

@@ -74,7 +74,9 @@ import jax.numpy as jnp
 
 from repro.core import histogram as hg
 from repro.core import index as hix
-from repro.core.partition import ShardedHippoState, set_shard, shard_state, summary_of
+from repro.core import learned as ln
+from repro.core.partition import (SUMMARY_POLICIES, ShardedHippoState,
+                                  set_shard, shard_state, summary_of)
 
 _STAGE_BUCKET_MIN = 8   # smallest device overlay width (trace bucketing)
 
@@ -130,6 +132,8 @@ class WriterStats:
     drained_rows: int = 0     # live tuples applied to the index by drains
     vacuums: int = 0          # shard vacuums drained
     resummarizes: int = 0     # shard remaps drained (drift re-summarization)
+    learned_refits: int = 0   # resummarize schedules served by a learned fit
+    learned_fallbacks: int = 0  # learned schedules that fell back to equal-mass
     last_drain_us: float = 0.0
     total_drain_us: float = 0.0
 
@@ -169,6 +173,7 @@ class MaintenanceWriter:
         self.drift = hg.DriftTracker(index.shard_histogram(s_tail))
         self._pending_resummarize: list[int] = []
         self._pending_bounds: np.ndarray | None = None
+        self._pending_model = None   # learned model behind the pending bounds
         self._resum_epoch = 0
 
     # -- staging (the off-query-path write surface) --------------------------
@@ -275,16 +280,28 @@ class MaintenanceWriter:
 
     # -- drift re-summarization (the third drain-unit kind) ------------------
 
-    def schedule_resummarize(self, bounds=None) -> hg.Histogram:
+    def schedule_resummarize(self, bounds=None, policy=None) -> hg.Histogram:
         """Queue a remap of every shard onto new histogram bounds.
 
-        With ``bounds=None`` the new boundary set comes from
-        ``histogram.rebuild``: the armed bounds' own boundary summary blended
-        *equal-mass* with the drift reservoir. Equal mass (rather than
-        weighting by tuple counts) is a deliberate policy: the reservoir
-        region is where the workload is writing — and, under drift, where it
-        is querying — so it gets half the boundary budget however few rows
-        it holds yet, while the old data's resolution loss is bounded at 2x.
+        With ``bounds=None`` the new boundary set comes from the summary
+        policy — ``policy`` if given, else the index's ``summary`` attribute
+        (``core.partition.SUMMARY_POLICIES``):
+
+        - ``"equal_mass"``: ``histogram.rebuild`` — the armed bounds' own
+          boundary summary blended *equal-mass* with the drift reservoir.
+          Equal mass (rather than weighting by tuple counts) is a deliberate
+          policy: the reservoir region is where the workload is writing —
+          and, under drift, where it is querying — so it gets half the
+          boundary budget however few rows it holds yet, while the old
+          data's resolution loss is bounded at 2x.
+        - ``"learned"``: ``learned.learned_rebuild`` — an error-bounded
+          piecewise-linear fit of the same {old summary, reservoir} blend,
+          with the reservoir carrying the dominant mass share and per-key
+          mass clamped at one bucket's worth. A degenerate sample falls back
+          to the equal-mass path (``stats.learned_fallbacks``); the fitted
+          model is recorded per shard (``index.summary_models``) as each
+          shard's remap drains.
+
         An explicit ``bounds`` array schedules a manual remap (callers
         wanting count-weighted blending can call ``histogram.rebuild`` with
         ``old_count``/``new_count`` themselves). Rescheduling before the
@@ -296,6 +313,12 @@ class MaintenanceWriter:
         """
         self.index._check_swap_guard()
         self._check_attached()
+        if policy is None:
+            policy = getattr(self.index, "summary", "equal_mass")
+        if policy not in SUMMARY_POLICIES:
+            raise ValueError(f"policy must be one of {SUMMARY_POLICIES}, "
+                             f"got {policy!r}")
+        self._pending_model = None
         if bounds is None:
             sample = self.drift.sample()
             if sample.size == 0:
@@ -303,7 +326,16 @@ class MaintenanceWriter:
                     "no drift sample: stage inserts through write() before "
                     "scheduling a reservoir-based resummarize, or pass "
                     "explicit bounds")
-            hist = hg.rebuild(self.drift.armed_histogram, sample)
+            if policy == "learned":
+                hist, model = ln.learned_rebuild(self.drift.armed_histogram,
+                                                 sample)
+                self._pending_model = model
+                if model is None:
+                    self.stats.learned_fallbacks += 1
+                else:
+                    self.stats.learned_refits += 1
+            else:
+                hist = hg.rebuild(self.drift.armed_histogram, sample)
             bounds = hg.host_bounds(hist)
         bounds = np.asarray(bounds, np.float32)
         self._pending_bounds = bounds
@@ -548,9 +580,15 @@ class MaintenanceWriter:
         finally:
             idx.swap_in_flight = None
         idx.bounds_epochs[s] = self._resum_epoch
+        models = getattr(idx, "summary_models", None)
+        if models is not None:
+            # shard s now serves the pending bounds: its model (None under
+            # equal-mass or a fallback) swaps in at the same moment
+            models[s] = self._pending_model
         self._pending_resummarize.remove(s)
         self.stats.resummarizes += 1
         if not self._pending_resummarize:
             # every shard serves the new bounds: measure drift against them
             self.drift.rearm(hg.Histogram(jnp.asarray(b)))
             self._pending_bounds = None
+            self._pending_model = None

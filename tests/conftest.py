@@ -1,12 +1,13 @@
 """Shared pytest configuration: test tiers.
 
 Tier-1 (everything): ``PYTHONPATH=src python -m pytest -x -q``
-Fast inner loop:     ``PYTHONPATH=src python -m pytest -x -q -m "not slow and not shard and not writer and not compact and not drift and not bench"``
+Fast inner loop:     ``PYTHONPATH=src python -m pytest -x -q -m "not slow and not shard and not writer and not compact and not drift and not bench and not learned"``
 Partition suite:     ``PYTHONPATH=src python -m pytest -x -q -m shard``
 Writer suite:        ``PYTHONPATH=src python -m pytest -x -q -m writer``
 Compact suite:       ``PYTHONPATH=src python -m pytest -x -q -m compact``
 Drift suite:         ``PYTHONPATH=src python -m pytest -x -q -m drift``
 Bench gate:          ``PYTHONPATH=src python -m pytest -x -q -m bench``
+Learned suite:       ``PYTHONPATH=src python -m pytest -x -q -m learned``
 
 ``slow`` marks the model/launch/system modules that compile transformer steps
 or fork subprocess meshes; ``shard`` marks the partition-layer suite (many
@@ -19,10 +20,14 @@ re-summarization equivalence sweep (``tests/test_drift.py`` — remap/epoch
 traces over several shard counts); ``bench`` marks the perf regression
 gate's end-to-end invocation (a quick ``benchmarks.run`` sweep checked
 against the committed ``BENCH_*.json`` baseline — real benchmark work, so
-it stays out of the inner loop). Excluding all six keeps the core
-index/kernel/maintenance inner loop well under a minute. The markers are
-documented in README.md, and ``scripts/check_markers.py`` fails the build if
-a test module uses a marker that is not registered below.
+it stays out of the inner loop); ``learned`` marks the learned-summary
+equivalence sweep (``tests/test_learned.py`` — learned bounds bit-identical
+to brute force across selectivity x shards x staged overlay, plus the
+writer/engine policy integration — stacked-state traces like the drift
+suite). Excluding all seven keeps the core index/kernel/maintenance inner
+loop well under a minute. The markers are documented in README.md, and
+``scripts/check_markers.py`` fails the build if a test module uses a marker
+that is not registered below.
 """
 
 
@@ -60,3 +65,11 @@ def pytest_configure(config):
         "— a quick kernels-suite benchmarks.run gated against the committed "
         "BENCH_*.json baseline); runs real benchmark timing loops — run "
         "just these with -m bench")
+    config.addinivalue_line(
+        "markers",
+        "learned: learned-summary sweep (tests/test_learned.py — "
+        "piecewise-linear CDF fit properties, learned bounds bit-identical "
+        "counts across selectivity x shards x staged overlay incl. mixed "
+        "epochs, writer/engine summary-policy integration); compiles "
+        "stacked-state traces like the drift suite — run just these with "
+        "-m learned")

@@ -214,6 +214,37 @@ def test_resummarize_restores_pruning_quality():
     assert st.pruning_before_resummarize == 0.0    # no batches ran before it
 
 
+@pytest.mark.parametrize("reservoir", ["constant", "duplicate_heavy",
+                                       "single_point_drift"])
+def test_resummarize_remap_bit_identical_under_adversarial_bounds(reservoir):
+    """Satellite invariant: bounds rebuilt from a degenerate reservoir
+    (constant, duplicate-heavy, single far point) still pass the drain's
+    strictness validation, and the remap changes no count on any path —
+    the epsilon-laddered buckets are empty, not wrong."""
+    rng = np.random.default_rng(41)
+    samples = {
+        "constant": np.full(256, 42.0, np.float32),
+        "duplicate_heavy": rng.choice(
+            np.asarray([10.0, 20.0, 30.0], np.float32), 256),
+        "single_point_drift": np.full(256, 1e6, np.float32),
+    }
+    aidx = make_sidx(np.sort(rng.uniform(0, 100, 300)))
+    writer = MaintenanceWriter(aidx)
+    preds = drift_preds()
+    want = brute_force(aidx.table, preds)
+    from repro.core import histogram as hg
+    bounds = np.asarray(hg.rebuild(aidx.histogram,
+                                   samples[reservoir]).bounds)
+    assert (np.diff(bounds) > 0).all()
+    writer.schedule_resummarize(bounds)
+    writer.flush()                     # a refusal would raise here
+    assert list(aidx.bounds_epochs) == [1] * aidx.num_shards
+    np.testing.assert_array_equal(
+        np.asarray(aidx.search_batch(preds).counts), want)
+    engine = QueryEngine(aidx, batch=8, drain_policy="manual", writer=writer)
+    np.testing.assert_array_equal(engine.run_all(preds), want)
+
+
 def test_engine_drift_knob_validation():
     rng = np.random.default_rng(37)
     aidx = make_sidx(rng.uniform(0, 100, 100))

@@ -81,3 +81,128 @@ def test_rebuild_bounds_strictly_increase_in_float32():
     b = np.asarray(new.bounds)
     assert b.dtype == np.float32
     assert (np.diff(b) > 0).all()
+
+
+def _adversarial_reservoirs():
+    """Reservoir shapes that historically degenerate quantile rebuilds."""
+    rng = np.random.default_rng(7)
+    return {
+        "constant": np.full(512, 42.0, np.float32),
+        "duplicate_heavy": rng.choice(
+            np.asarray([1.0, 2.0, 3.0], np.float32), 512),
+        "single_point_drift": np.full(512, 1e6, np.float32),
+        "two_distinct_far": np.asarray([0.5] * 500 + [1e7] * 12, np.float32),
+        "large_magnitude_narrow": (1e9 + rng.uniform(0, 1e-3, 512)
+                                   ).astype(np.float32),
+    }
+
+
+@pytest.mark.parametrize("name", sorted(_adversarial_reservoirs()))
+@pytest.mark.parametrize("resolution", [8, 64, 400])
+def test_rebuild_strict_under_adversarial_reservoirs(name, resolution):
+    """Property sweep: whatever the reservoir collapses to — one value, a
+    handful of heavy duplicates, a far-away point mass — ``rebuild`` must
+    return (H+1,) strictly-increasing float32 bounds covering the blended
+    span, because the writer's remap drain refuses anything less and the
+    refusal would wedge re-summarization forever."""
+    sample = _adversarial_reservoirs()[name]
+    for base in (hg.build_uniform(0.0, 100.0, resolution),
+                 hg.build(jnp.asarray(np.full(64, 7.0)), resolution)):
+        new = hg.rebuild(base, sample)
+        b = np.asarray(new.bounds)
+        assert b.shape == (resolution + 1,) and b.dtype == np.float32
+        assert (np.diff(b) > 0).all(), (name, resolution)
+        lo = min(float(np.asarray(base.bounds)[0]), float(sample.min()))
+        assert b[0] <= lo + max(abs(lo) * 1e-5, 1e-3)
+
+
+def test_strict_float32_bounds_properties():
+    """The shared finalizer: nondecreasing in, strictly-increasing f32 out,
+    already-strict inputs pass through unchanged."""
+    flat = hg.strict_float32_bounds(np.zeros(33))
+    assert (np.diff(flat) > 0).all()
+    wobble = hg.strict_float32_bounds(
+        np.asarray([0.0, 1.0, 1.0 - 1e-9, 2.0, 2.0]))
+    assert (np.diff(wobble) > 0).all()
+    big = hg.strict_float32_bounds(np.full(401, 1e9))
+    assert (np.diff(big) > 0).all()
+    clean = np.linspace(0.0, 100.0, 11, dtype=np.float32)
+    # the span-proportional ladder perturbs below f32 resolution here
+    np.testing.assert_allclose(hg.strict_float32_bounds(clean), clean,
+                               rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# hit_bucket_range: out-of-domain predicates prune completely (PR 7)
+# ---------------------------------------------------------------------------
+
+def test_hit_bucket_range_outside_domain_is_empty():
+    """A predicate entirely below or above the summary domain, or an empty
+    one (lo > hi), reports the empty bucket range (b_lo > b_hi) instead of
+    clamping both endpoints into an edge bucket — clamping selected every
+    page summarized under that bucket for a provably matchless query."""
+    hist = hg.build_uniform(0.0, 100.0, 10)
+    for lo, hi in [(-50.0, -10.0), (120.0, 400.0), (5.0, 1.0)]:
+        b_lo, b_hi = hg.hit_bucket_range(hist, lo, hi)
+        assert int(b_lo) > int(b_hi), (lo, hi)
+
+
+def test_hit_bucket_range_straddling_domain_still_clamps():
+    """Partial overlap keeps the clamp: out-of-domain *tuples* land in edge
+    buckets at insert time (§4.1), so a predicate reaching past one edge
+    must still report that edge bucket."""
+    hist = hg.build_uniform(0.0, 100.0, 10)
+    b_lo, b_hi = hg.hit_bucket_range(hist, -50.0, 15.0)
+    assert (int(b_lo), int(b_hi)) == (0, 1)
+    b_lo, b_hi = hg.hit_bucket_range(hist, 95.0, 500.0)
+    assert (int(b_lo), int(b_hi)) == (9, 9)
+    b_lo, b_hi = hg.hit_bucket_range(hist, -1e30, 1e30)
+    assert (int(b_lo), int(b_hi)) == (0, 9)
+
+
+# ---------------------------------------------------------------------------
+# Batched observe: one call == the sequential semantics (PR 7)
+# ---------------------------------------------------------------------------
+
+def test_observe_batched_counters_match_sequential():
+    """Counters (hits, observed, out_of_range, edge ratio) are
+    order-exact: one batched call equals per-value calls equals any split
+    of the stream into chunks."""
+    hist = hg.build_uniform(0.0, 100.0, 10)
+    rng = np.random.default_rng(11)
+    stream = rng.uniform(-20.0, 140.0, 3000).astype(np.float32)
+    one = hg.DriftTracker(hist)
+    one.observe(stream)
+    per = hg.DriftTracker(hist)
+    for v in stream:
+        per.observe(v)
+    chunked = hg.DriftTracker(hist)
+    for part in np.array_split(stream, 7):
+        chunked.observe(part)
+    for tr in (per, chunked):
+        assert tr.observed == one.observed == stream.size
+        assert tr.out_of_range == one.out_of_range
+        np.testing.assert_array_equal(tr.hits, one.hits)
+        assert tr.edge_overflow_ratio == one.edge_overflow_ratio
+    one.observe(np.zeros(0))                     # empty batch: no-op
+    assert one.observed == stream.size
+
+
+def test_observe_batched_reservoir_admission_is_unbiased():
+    """The vectorized algorithm-R admission: the fill prefix is the stream
+    prefix exactly, the reservoir never exceeds its size, holds only
+    observed values, and stays representative of the whole stream (values
+    from the late tail appear at roughly their fair share)."""
+    hist = hg.build_uniform(0.0, 1.0, 4)
+    tr = hg.DriftTracker(hist, reservoir_size=128)
+    head = np.linspace(0.0, 1.0, 100, dtype=np.float32)
+    tr.observe(head)
+    np.testing.assert_array_equal(tr.sample(), head)   # prefix fill, in order
+    tail = np.linspace(100.0, 200.0, 10_000, dtype=np.float32)
+    tr.observe(tail)
+    s = tr.sample()
+    assert s.size == 128
+    full = np.concatenate([head, tail])
+    assert np.isin(s, full).all()
+    # ~99% of the stream is tail, so the reservoir should be mostly tail
+    assert (s >= 100.0).sum() > 100
