@@ -45,6 +45,11 @@ DEFAULT_ROW_TOLERANCES = {
     "sweep_compact_sel0.5": 0.6,
     "sweep_compact_sel0.01": 0.4,
     "async_maint_staged": 0.4,
+    # durable-storage throughput rows: fsync latency on shared hosts is
+    # the dominant term and swings with unrelated disk traffic; the bytes
+    # claim itself is asserted in-bench, these only guard gross breakage
+    "storage_save": 0.6,
+    "storage_load": 0.6,
     # sub-100ms kernel rows: min-of-15 still swings ~35-40% when a host
     # noise stretch outlasts the whole rep window
     "kernel_bitmap_and_64k": 0.45,

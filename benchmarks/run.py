@@ -40,6 +40,7 @@ from benchmarks import (
     bench_maintenance,
     bench_selectivity_sweep,
     bench_shard_scaling,
+    bench_storage,
 )
 from benchmarks import check, common
 
@@ -88,6 +89,8 @@ REGISTRY = {
                     card=10_000 if quick else bench_learned.CARD,
                     rounds=2 if quick else bench_learned.ROUNDS,
                     inserts=1200 if quick else bench_learned.INSERTS)),
+    "storage": (bench_storage, lambda quick: bench_storage.run(
+        card=50_000 if quick else bench_storage.CARD)),
 }
 
 MODULES = {name: mod for name, (mod, _) in REGISTRY.items()}

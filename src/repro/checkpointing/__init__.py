@@ -1,3 +1,11 @@
 from repro.checkpointing.checkpoint import (  # noqa: F401
     CheckpointManager, restore_checkpoint, save_checkpoint,
 )
+from repro.checkpointing.layout import (  # noqa: F401
+    CorruptSnapshotError, commit_sentinel, pack_sections, read_section_file,
+    section_sizes, unpack_sections, write_file_durable, write_section_file,
+)
+from repro.checkpointing.snapshot import (  # noqa: F401
+    disk_usage, latest_epoch, load_index, recover_index, save_index,
+)
+from repro.checkpointing.wal import Journal, WalRecord  # noqa: F401

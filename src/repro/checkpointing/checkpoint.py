@@ -26,6 +26,8 @@ import numpy as np
 
 import jax
 
+from repro.checkpointing.layout import commit_sentinel, fsync_file
+
 
 def _flatten(tree):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
@@ -51,7 +53,15 @@ def save_checkpoint(ckpt_dir: str | Path, step: int, tree, *, async_write: bool 
         for i, arr in enumerate(host_leaves):
             np.save(d / f"leaf_{i}.npy", arr)
         (d / "manifest.json").write_text(json.dumps(manifest))
-        (d / "COMMITTED").touch()
+        # Commit point: every payload byte must be durable *before* the
+        # sentinel appears, and the sentinel itself lands via an fsynced
+        # temp + atomic rename (checkpointing.layout.commit_sentinel).
+        # A bare touch() here could surface after a crash with torn leaf
+        # files behind it — a committed-but-corrupt checkpoint.
+        for i in range(len(host_leaves)):
+            fsync_file(d / f"leaf_{i}.npy")
+        fsync_file(d / "manifest.json")
+        commit_sentinel(d)
 
     if async_write:
         t = threading.Thread(target=write, daemon=True)

@@ -598,3 +598,23 @@ class ShardedHippoIndex:
         total += self.spec.num_shards * 8        # routing map: page range per shard
         total += int(np.asarray(self.state.summaries).nbytes)
         return total
+
+    # -- persistence (checkpointing.snapshot) --------------------------------
+
+    def save(self, root, *, wal_seqno: int = 0, keep: int = 3):
+        """Durably snapshot this index (table, shards, bounds/epochs, models,
+        and any attached writer's staged state) under ``<root>/snap_<N>/``.
+        Returns the committed snapshot directory. See
+        ``repro.checkpointing.snapshot.save_index``."""
+        from repro.checkpointing.snapshot import save_index
+        return save_index(root, self, wal_seqno=wal_seqno, keep=keep)
+
+    @staticmethod
+    def load(root, *, epoch: int | None = None) -> "ShardedHippoIndex":
+        """Reconstruct the latest (or a given) committed snapshot. Counts,
+        row ids, bounds, epochs, and learned models round-trip exactly; use
+        ``checkpointing.snapshot.recover_index`` (or
+        ``runtime.engine.QueryEngine.recover``) to also replay a write-ahead
+        journal after a crash."""
+        from repro.checkpointing.snapshot import load_index
+        return load_index(root, epoch=epoch)[0]

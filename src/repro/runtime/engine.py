@@ -286,7 +286,9 @@ class QueryEngine:
                  drift_threshold: float | None = 0.25,
                  auto_resummarize: bool = True,
                  drift_min_observed: int = 256,
-                 summary: str | None = None):
+                 summary: str | None = None,
+                 storage_dir=None, snapshot_on_drain: bool = True,
+                 wal_sync: bool = True):
         if batch < 1:
             raise ValueError(f"batch must be >= 1, got {batch}")
         self.index = index
@@ -361,6 +363,41 @@ class QueryEngine:
         self.stats = EngineStats()
         self._next_qid = 0
         self._auto_drain_suspended = False
+        # -- durable storage (checkpointing.snapshot + checkpointing.wal) ----
+        # With ``storage_dir`` set, every acknowledged write()/delete()/
+        # resummarize journals before it stages (append before admission),
+        # and each successful drain commits a snapshot then truncates the
+        # journal — so QueryEngine.recover() restores the acknowledged state
+        # after a crash at any instant. The directory must be fresh; an
+        # existing snapshot/journal means a previous engine's durable state,
+        # which recover() (not a new engine) must adopt.
+        from pathlib import Path as _Path
+        self.storage_dir = _Path(storage_dir) if storage_dir is not None \
+            else None
+        self.snapshot_on_drain = snapshot_on_drain
+        self.journal = None
+        if self.storage_dir is not None:
+            if self.writer is None:
+                raise ValueError(
+                    "storage_dir needs a writer-backed engine (an async "
+                    "drain_policy on a ShardedHippoIndex); a writer-less "
+                    "index persists directly via index.save()")
+            from repro.checkpointing.snapshot import latest_epoch
+            from repro.checkpointing.wal import Journal
+            journal = Journal(self.storage_dir, index.spec.num_shards,
+                              sync=wal_sync)
+            if latest_epoch(self.storage_dir) is not None \
+                    or journal.last_seqno > 0:
+                raise ValueError(
+                    f"storage_dir {self.storage_dir} already holds a "
+                    f"snapshot or journal — use QueryEngine.recover() to "
+                    f"adopt existing durable state")
+            self.journal = journal
+            if self.writer.journal is None:
+                self.writer.journal = journal
+            # initial durable base: recovery needs a committed snapshot to
+            # replay the journal against, even before the first drain
+            self.save()
 
     # -- admission (mirrors BatchServer.admit) -------------------------------
 
@@ -483,6 +520,7 @@ class QueryEngine:
         st.window_table_pages = 0
 
     def _drain(self, max_units: int | None) -> int:
+        before = self.writer.stats.drains
         try:
             rows = self.writer.drain(max_units)
         finally:
@@ -490,7 +528,53 @@ class QueryEngine:
             # progress instead of letting EngineStats claim nothing happened
             self._sync_writer_stats()
         self._auto_drain_suspended = False      # a successful drain re-arms
+        if (self.storage_dir is not None and self.snapshot_on_drain
+                and self.writer.stats.drains > before):
+            # drain-swap commit point: snapshot the post-drain state, then
+            # truncate the journal (save() records the watermark first, so
+            # a crash between the two replays nothing twice)
+            self.save()
         return rows
+
+    def save(self):
+        """Commit a durable snapshot of the index (staged queues included)
+        and truncate the journal. Returns the committed snapshot directory.
+        Requires ``storage_dir``; called automatically at every successful
+        drain unless ``snapshot_on_drain=False``."""
+        if self.storage_dir is None:
+            raise RuntimeError("save() needs storage_dir (durable mode); "
+                               "writer-less indexes persist via index.save()")
+        path = self.index.save(self.storage_dir,
+                               wal_seqno=self.journal.last_seqno)
+        self.journal.reset()
+        return path
+
+    @classmethod
+    def recover(cls, storage_dir, *, wal_sync: bool = True,
+                snapshot_on_recover: bool = True, **kwargs) -> "QueryEngine":
+        """Rebuild an engine from a durable directory after a crash: load
+        the latest committed snapshot (uncommitted partials are ignored),
+        replay the journal suffix through a fresh writer, and re-attach the
+        journal so subsequent writes stay durable. ``snapshot_on_recover``
+        immediately collapses snapshot + replayed journal into a fresh
+        committed base. Extra ``kwargs`` configure the engine as usual
+        (``storage_dir`` comes from the first argument)."""
+        if "storage_dir" in kwargs or "writer" in kwargs:
+            raise ValueError("recover() derives storage_dir and writer from "
+                             "the durable directory itself")
+        from pathlib import Path as _Path
+        from repro.checkpointing.snapshot import recover_index
+        idx, writer, journal = recover_index(storage_dir, wal_sync=wal_sync)
+        if writer is None:
+            writer = MaintenanceWriter(idx)
+            writer.journal = journal
+        eng = cls(idx, writer=writer, **kwargs)
+        eng.storage_dir = _Path(storage_dir)
+        eng.journal = journal
+        eng._sync_writer_stats()
+        if snapshot_on_recover:
+            eng.save()
+        return eng
 
     def _sync_writer_stats(self) -> None:
         w = self.writer

@@ -145,7 +145,7 @@ class MaintenanceWriter:
     every search path folds the staging overlay into counts from then on.
     """
 
-    def __init__(self, index):
+    def __init__(self, index, journal=None):
         for attr in ("spec", "state", "plan_batch"):
             if not hasattr(index, attr):
                 raise ValueError(
@@ -161,6 +161,12 @@ class MaintenanceWriter:
                 f"rows pending: flush() it before attaching a new one")
         self.index = index
         index.staging = self
+        # Write-ahead journal (checkpointing.wal.Journal, or None): when
+        # attached, every acknowledged operation appends one fsynced record
+        # *before* any in-memory state changes — append before admission —
+        # so crash recovery (checkpointing.snapshot.recover_index) can
+        # replay exactly the acknowledged stream past the last snapshot.
+        self.journal = journal
         self._queues: dict[int, _ShardQueue] = {}
         self._staged_total = 0       # pending tuples, dead rows included
         self._version = 0            # bumps on any staging change
@@ -214,6 +220,10 @@ class MaintenanceWriter:
                 f"past shard {spec.num_shards - 1}'s slab "
                 f"(pages_per_shard={spec.pages_per_shard}); rebuild with more "
                 f"shards or larger slabs")
+        if self.journal is not None:
+            # durable before acknowledged: if this append fails, the write
+            # raises with nothing staged and nothing to lose
+            self.journal.append_insert(s, float(value))
         self._queues.setdefault(s, _ShardQueue()).append(float(value))
         self._staged_total += 1
         self._version += 1
@@ -230,6 +240,8 @@ class MaintenanceWriter:
         deleted (table + staged)."""
         self.index._check_swap_guard()
         self._check_attached()
+        if self.journal is not None:
+            self.journal.append_delete(float(lo), float(hi))
         table = self.index.table
         spec = self.index.spec
         was_fresh = table._dev_shard is not None and not table._dev_shard_stale
@@ -338,6 +350,10 @@ class MaintenanceWriter:
                 hist = hg.rebuild(self.drift.armed_histogram, sample)
             bounds = hg.host_bounds(hist)
         bounds = np.asarray(bounds, np.float32)
+        if self.journal is not None:
+            # the *materialized* bounds are journaled (not the reservoir
+            # they came from), so replay schedules the identical remap
+            self.journal.append_resummarize(bounds, policy)
         self._pending_bounds = bounds
         self._pending_resummarize = list(range(self.index.spec.num_shards))
         self._resum_epoch = int(self.index.bounds_epochs.max()) + 1

@@ -1,13 +1,14 @@
 """Shared pytest configuration: test tiers.
 
 Tier-1 (everything): ``PYTHONPATH=src python -m pytest -x -q``
-Fast inner loop:     ``PYTHONPATH=src python -m pytest -x -q -m "not slow and not shard and not writer and not compact and not drift and not bench and not learned"``
+Fast inner loop:     ``PYTHONPATH=src python -m pytest -x -q -m "not slow and not shard and not writer and not compact and not drift and not bench and not learned and not persist"``
 Partition suite:     ``PYTHONPATH=src python -m pytest -x -q -m shard``
 Writer suite:        ``PYTHONPATH=src python -m pytest -x -q -m writer``
 Compact suite:       ``PYTHONPATH=src python -m pytest -x -q -m compact``
 Drift suite:         ``PYTHONPATH=src python -m pytest -x -q -m drift``
 Bench gate:          ``PYTHONPATH=src python -m pytest -x -q -m bench``
 Learned suite:       ``PYTHONPATH=src python -m pytest -x -q -m learned``
+Persistence suite:   ``PYTHONPATH=src python -m pytest -x -q -m persist``
 
 ``slow`` marks the model/launch/system modules that compile transformer steps
 or fork subprocess meshes; ``shard`` marks the partition-layer suite (many
@@ -24,8 +25,12 @@ it stays out of the inner loop); ``learned`` marks the learned-summary
 equivalence sweep (``tests/test_learned.py`` — learned bounds bit-identical
 to brute force across selectivity x shards x staged overlay, plus the
 writer/engine policy integration — stacked-state traces like the drift
-suite). Excluding all seven keeps the core index/kernel/maintenance inner
-loop well under a minute. The markers are documented in README.md, and
+suite); ``persist`` marks the durable-storage suite
+(``tests/test_persistence.py`` — snapshot round-trip equivalence, WAL
+crash-injection recovery, binary-layout corruption handling — builds and
+recovers full sharded engines, so it compiles stacked-state traces and
+does real disk I/O). Excluding all eight keeps the core
+index/kernel/maintenance inner loop well under a minute. The markers are documented in README.md, and
 ``scripts/check_markers.py`` fails the build if a test module uses a marker
 that is not registered below.
 """
@@ -73,3 +78,11 @@ def pytest_configure(config):
         "epochs, writer/engine summary-policy integration); compiles "
         "stacked-state traces like the drift suite — run just these with "
         "-m learned")
+    config.addinivalue_line(
+        "markers",
+        "persist: durable-storage tests (tests/test_persistence.py — "
+        "save/load round-trip equivalence across shards x summary policy x "
+        "staged overlay x mixed epochs, crash-injected drain recovery via "
+        "snapshot + journal replay, section-container corruption handling); "
+        "builds full sharded engines and does real disk I/O — run just "
+        "these with -m persist")

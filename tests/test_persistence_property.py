@@ -1,0 +1,73 @@
+"""Property tests for the snapshot binary layout (hypothesis-driven).
+
+The hypothesis half of satellite coverage for ``checkpointing.layout``:
+arbitrary section dicts — any supported dtype, any shape up to the format's
+8-dim limit, any section count — must round-trip byte-exactly through
+``pack_sections``/``unpack_sections``, and *any* truncation of a valid blob
+must raise ``CorruptSnapshotError`` rather than construct arrays. The
+container has no pip dependency on hypothesis: this module skips cleanly
+where it is absent (the seeded non-hypothesis sweep in
+``tests/test_persistence.py`` still runs everywhere).
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.checkpointing.layout import (CorruptSnapshotError,  # noqa: E402
+                                        pack_sections, unpack_sections)
+
+pytestmark = pytest.mark.persist
+
+_DTYPES = st.sampled_from(["float32", "float64", "int32", "int64",
+                           "uint8", "uint16", "uint32", "bool"])
+_SHAPES = st.lists(st.integers(min_value=0, max_value=5),
+                   min_size=0, max_size=4).map(tuple)
+_NAMES = st.text(alphabet=st.characters(min_codepoint=33, max_codepoint=126),
+                 min_size=1, max_size=24)
+
+
+@st.composite
+def _sections(draw):
+    names = draw(st.lists(_NAMES, min_size=1, max_size=6, unique=True))
+    out = {}
+    for name in names:
+        dt = np.dtype(draw(_DTYPES))
+        shape = draw(_SHAPES)
+        n = int(np.prod(shape, dtype=np.int64))
+        raw = draw(st.binary(min_size=n * dt.itemsize,
+                             max_size=n * dt.itemsize))
+        out[name] = np.frombuffer(raw, dtype=dt, count=n).reshape(shape).copy()
+    return out
+
+
+@settings(max_examples=60, deadline=None)
+@given(_sections())
+def test_arbitrary_sections_round_trip_byte_exactly(sections):
+    back = unpack_sections(pack_sections(sections), origin="hypothesis")
+    assert set(back) == set(sections)
+    for name, arr in sections.items():
+        got = back[name]
+        assert got.dtype == arr.dtype
+        assert got.shape == arr.shape
+        assert got.tobytes() == arr.tobytes()
+
+
+@settings(max_examples=60, deadline=None)
+@given(_sections(), st.data())
+def test_any_truncation_raises_clean_corruption_error(sections, data):
+    blob = pack_sections(sections)
+    cut = data.draw(st.integers(min_value=0, max_value=len(blob) - 1))
+    with pytest.raises(CorruptSnapshotError):
+        unpack_sections(blob[:cut], origin="truncated")
+
+
+@settings(max_examples=40, deadline=None)
+@given(_sections(), st.data())
+def test_any_version_bump_is_refused(sections, data):
+    blob = bytearray(pack_sections(sections))
+    bad = data.draw(st.integers(min_value=2, max_value=2**32 - 1))
+    blob[8:12] = bad.to_bytes(4, "little")   # header version field
+    with pytest.raises(CorruptSnapshotError, match="version"):
+        unpack_sections(bytes(blob), origin="version-bump")
