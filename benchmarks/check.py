@@ -50,6 +50,11 @@ DEFAULT_ROW_TOLERANCES = {
     # claim itself is asserted in-bench, these only guard gross breakage
     "storage_save": 0.6,
     "storage_load": 0.6,
+    # crash-recovery RTO rows: same disk-noise profile as the storage pair
+    # (snapshot + delta + journal reads, engine rebuild); the commit-bytes
+    # ratio is asserted in-bench, these only guard gross breakage
+    "recovery_rto_incremental": 0.6,
+    "recovery_rto_wal_replay": 0.6,
     # sub-100ms kernel rows: min-of-15 still swings ~35-40% when a host
     # noise stretch outlasts the whole rep window
     "kernel_bitmap_and_64k": 0.45,

@@ -38,6 +38,7 @@ from benchmarks import (
     bench_kernels,
     bench_learned,
     bench_maintenance,
+    bench_recovery,
     bench_selectivity_sweep,
     bench_shard_scaling,
     bench_storage,
@@ -91,6 +92,11 @@ REGISTRY = {
                     inserts=1200 if quick else bench_learned.INSERTS)),
     "storage": (bench_storage, lambda quick: bench_storage.run(
         card=50_000 if quick else bench_storage.CARD)),
+    "recovery": (bench_recovery, lambda quick: bench_recovery.run(
+        card=30_000 if quick else bench_recovery.CARD,
+        rounds=4 if quick else bench_recovery.ROUNDS,
+        writes_per_round=120 if quick
+        else bench_recovery.WRITES_PER_ROUND)),
 }
 
 MODULES = {name: mod for name, (mod, _) in REGISTRY.items()}

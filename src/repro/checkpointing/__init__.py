@@ -6,6 +6,7 @@ from repro.checkpointing.layout import (  # noqa: F401
     section_sizes, unpack_sections, write_file_durable, write_section_file,
 )
 from repro.checkpointing.snapshot import (  # noqa: F401
-    disk_usage, latest_epoch, load_index, recover_index, save_index,
+    delta_chain, disk_usage, latest_delta_seq, latest_epoch, load_index,
+    recover_index, save_delta, save_index,
 )
 from repro.checkpointing.wal import Journal, WalRecord  # noqa: F401

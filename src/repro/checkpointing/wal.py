@@ -33,15 +33,30 @@ numbers keep increasing across resets, and the snapshot records the
 ``last_seqno`` watermark at its commit; replay skips records at or below
 the watermark, so a crash *between* snapshot commit and journal reset can
 never double-apply an operation.
+
+``truncate_through(seqno)`` is the watermark-aware form the background
+persister needs: when a snapshot commits *asynchronously*, the foreground
+may have appended records past the snapshot's watermark by the time the
+commit callback runs — ``reset()`` would destroy those still-unsnapshotted
+acknowledgements. ``truncate_through`` rewrites each file keeping only the
+records past the watermark, each file committed by an atomic rename; a
+crash mid-truncate leaves some files trimmed and some not, which replay
+tolerates because every surviving record at or below the watermark is
+filtered by the watermark discipline anyway. Appends and truncations can
+race across threads (engine foreground vs. persister commit callback), so
+both run under one internal lock.
 """
 from __future__ import annotations
 
 import os
 import struct
+import threading
 from dataclasses import dataclass
 from pathlib import Path
 
 import numpy as np
+
+from repro.runtime.faultinject import crashpoint
 
 _FRAME = struct.Struct("<IIQB")      # crc32, payload_len, seqno, kind
 
@@ -104,6 +119,9 @@ class Journal:
         self.num_shards = num_shards
         self.sync = sync
         self._handles: dict[str, object] = {}
+        # appends (engine foreground) and truncations (persister commit
+        # callback) may run on different threads; file state is guarded
+        self._lock = threading.Lock()
         # resume seqno allocation after the highest surviving record, so
         # post-recovery appends always order after everything on disk
         records = self.replay()
@@ -123,17 +141,23 @@ class Journal:
         return h
 
     def _append(self, name: str, kind: int, payload: bytes) -> int:
-        seqno = self._next_seqno
-        crc = _crc(seqno, kind, payload)
-        h = self._handle(name)
-        h.write(_FRAME.pack(crc, len(payload), seqno, kind) + payload)
-        h.flush()
-        if self.sync:
-            os.fsync(h.fileno())
-        self._next_seqno += 1
-        return seqno
+        crashpoint("wal.pre_append")
+        with self._lock:
+            seqno = self._next_seqno
+            crc = _crc(seqno, kind, payload)
+            h = self._handle(name)
+            h.write(_FRAME.pack(crc, len(payload), seqno, kind) + payload)
+            h.flush()
+            if self.sync:
+                os.fsync(h.fileno())
+            self._next_seqno += 1
+            return seqno
 
     def close(self) -> None:
+        with self._lock:
+            self._close_locked()
+
+    def _close_locked(self) -> None:
         for h in self._handles.values():
             if not h.closed:
                 h.close()
@@ -187,20 +211,67 @@ class Journal:
 
     def reset(self) -> None:
         """Empty every journal file — call only after a snapshot that
-        captures the writer's staged state has durably committed. Sequence
-        numbers continue from where they were (the watermark discipline
-        depends on it)."""
-        self.close()
-        for name in self._filenames():
-            path = self.dir / name
-            with open(path, "wb") as f:
-                f.flush()
-                os.fsync(f.fileno())
-        fd = os.open(str(self.dir), os.O_RDONLY)
-        try:
-            os.fsync(fd)
-        finally:
-            os.close(fd)
+        captures the writer's staged state has durably committed *and* no
+        record was appended past that snapshot's watermark (the synchronous
+        drain-commit path guarantees this; concurrent writers must use
+        ``truncate_through``). Sequence numbers continue from where they
+        were (the watermark discipline depends on it)."""
+        with self._lock:
+            self._close_locked()
+            for name in self._filenames():
+                path = self.dir / name
+                with open(path, "wb") as f:
+                    f.flush()
+                    os.fsync(f.fileno())
+            fsync_dir_fd = os.open(str(self.dir), os.O_RDONLY)
+            try:
+                os.fsync(fsync_dir_fd)
+            finally:
+                os.close(fsync_dir_fd)
+
+    def truncate_through(self, seqno: int) -> None:
+        """Drop every record with ``seqno <=`` the given watermark, keeping
+        the rest — the commit callback of an asynchronous snapshot, which
+        may run after the foreground appended records the snapshot does not
+        cover. Each file is rewritten to a temp sibling, fsynced, and
+        renamed in atomically; a crash between files leaves a mix of
+        trimmed and untrimmed logs, all of whose at-or-below-watermark
+        survivors replay filters out by the watermark discipline."""
+        with self._lock:
+            self._close_locked()
+            for name in self._filenames():
+                path = self.dir / name
+                if not path.exists():
+                    continue
+                keep = [r for r in _scan_file(path) if r.seqno > seqno]
+                tmp = path.with_suffix(path.suffix + ".trunc")
+                with open(tmp, "wb") as f:
+                    for rec in keep:
+                        payload = _encode_payload(rec)
+                        f.write(_FRAME.pack(
+                            _crc(rec.seqno, rec.kind, payload),
+                            len(payload), rec.seqno, rec.kind) + payload)
+                    f.flush()
+                    os.fsync(f.fileno())
+                os.replace(tmp, path)
+            fsync_dir_fd = os.open(str(self.dir), os.O_RDONLY)
+            try:
+                os.fsync(fsync_dir_fd)
+            finally:
+                os.close(fsync_dir_fd)
+
+
+def _encode_payload(rec: WalRecord) -> bytes:
+    """Re-frame a decoded record's payload byte-identically (truncation
+    rewrites surviving records; the CRC covers exactly these bytes)."""
+    if rec.kind == KIND_INSERT:
+        return _INSERT.pack(rec.shard, rec.value)
+    if rec.kind == KIND_DELETE:
+        return _DELETE.pack(rec.lo, rec.hi)
+    if rec.kind == KIND_RESUM:
+        return bytes([_POLICY_IDS[rec.policy]]) + \
+            np.asarray(rec.bounds, np.float32).tobytes()
+    raise ValueError(f"unknown record kind {rec.kind}")
 
 
 def _crc(seqno: int, kind: int, payload: bytes) -> int:

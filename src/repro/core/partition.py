@@ -601,13 +601,22 @@ class ShardedHippoIndex:
 
     # -- persistence (checkpointing.snapshot) --------------------------------
 
-    def save(self, root, *, wal_seqno: int = 0, keep: int = 3):
+    def save(self, root, *, wal_seqno: int = 0, keep: int = 3, **kw):
         """Durably snapshot this index (table, shards, bounds/epochs, models,
         and any attached writer's staged state) under ``<root>/snap_<N>/``.
-        Returns the committed snapshot directory. See
+        Returns the committed snapshot directory. Extra keywords (``epoch``,
+        ``compact``) pass through to
         ``repro.checkpointing.snapshot.save_index``."""
         from repro.checkpointing.snapshot import save_index
-        return save_index(root, self, wal_seqno=wal_seqno, keep=keep)
+        return save_index(root, self, wal_seqno=wal_seqno, keep=keep, **kw)
+
+    def save_delta(self, root, *, shards, wal_seqno: int = 0, **kw):
+        """Durably commit an incremental delta — the given shards' index
+        sections and table slab rows — against the last full snapshot under
+        ``root``. See ``repro.checkpointing.snapshot.save_delta``."""
+        from repro.checkpointing.snapshot import save_delta
+        return save_delta(root, self, shards=shards, wal_seqno=wal_seqno,
+                          **kw)
 
     @staticmethod
     def load(root, *, epoch: int | None = None) -> "ShardedHippoIndex":

@@ -1,4 +1,10 @@
-from repro.runtime.fault import StepWatchdog, resilient_loop  # noqa: F401
+from repro.runtime.fault import (LoopStats, ServeStats,  # noqa: F401
+                                 StepWatchdog, resilient_loop,
+                                 resilient_serve)
+from repro.runtime.faultinject import (CrashPoints, InjectedCrash,  # noqa: F401
+                                       crash_points, crashpoint)
 from repro.runtime.elastic import reshard_for_mesh  # noqa: F401
 from repro.runtime.engine import EngineStats, QueryEngine, QueryTicket  # noqa: F401
+from repro.runtime.persister import (BackgroundPersister,  # noqa: F401
+                                     PersisterPoisoned, PersistStats)
 from repro.runtime.writer import MaintenanceWriter, WriterStats  # noqa: F401

@@ -169,6 +169,10 @@ class EngineStats:
     queue_depth: int = 0     # staged tuples pending after the last engine op
     peak_queue_depth: int = 0
     staged_rows: int = 0     # live staged rows currently overlaid into counts
+    # -- durable persistence (checkpointing + runtime.persister) -------------
+    persists: int = 0          # durable commits (full snapshots + deltas)
+    persist_pending: int = 0   # background commits queued or in flight
+    persist_lag: int = 0       # journal records not yet covered by a commit
     # -- drift re-summarization ----------------------------------------------
     resummarizes: int = 0            # shard remap units drained
     edge_overflow_ratio: float = 0.0  # writer drift telemetry, live value
@@ -288,7 +292,10 @@ class QueryEngine:
                  drift_min_observed: int = 256,
                  summary: str | None = None,
                  storage_dir=None, snapshot_on_drain: bool = True,
-                 wal_sync: bool = True):
+                 wal_sync: bool = True, snapshot_mode: str = "incremental",
+                 background_save: bool = False, compact_every: int = 8,
+                 compact_ratio: float = 0.5, snapshot_keep: int = 3,
+                 persist_queue: int = 4):
         if batch < 1:
             raise ValueError(f"batch must be >= 1, got {batch}")
         self.index = index
@@ -376,6 +383,27 @@ class QueryEngine:
             else None
         self.snapshot_on_drain = snapshot_on_drain
         self.journal = None
+        if snapshot_mode not in ("full", "incremental"):
+            raise ValueError(f"snapshot_mode must be 'full' or "
+                             f"'incremental', got {snapshot_mode!r}")
+        if compact_every < 1:
+            raise ValueError(f"compact_every must be >= 1, got "
+                             f"{compact_every}")
+        if compact_ratio <= 0:
+            raise ValueError(f"compact_ratio must be > 0, got "
+                             f"{compact_ratio}")
+        self.snapshot_mode = snapshot_mode
+        self.background_save = background_save
+        self.compact_every = compact_every
+        self.compact_ratio = compact_ratio
+        self.snapshot_keep = snapshot_keep
+        self.persist_queue = persist_queue
+        self._persister = None
+        self._base_epoch = None        # epoch of the current full base
+        self._delta_seq = 0            # committed deltas against it
+        self._full_bytes = 0           # base snapshot payload size
+        self._delta_bytes = 0          # cumulative chain payload size
+        self._durable_watermark = 0    # highest seqno covered by a commit
         if self.storage_dir is not None:
             if self.writer is None:
                 raise ValueError(
@@ -398,6 +426,7 @@ class QueryEngine:
             # initial durable base: recovery needs a committed snapshot to
             # replay the journal against, even before the first drain
             self.save()
+            self._start_persister()
 
     # -- admission (mirrors BatchServer.admit) -------------------------------
 
@@ -530,35 +559,194 @@ class QueryEngine:
         self._auto_drain_suspended = False      # a successful drain re-arms
         if (self.storage_dir is not None and self.snapshot_on_drain
                 and self.writer.stats.drains > before):
-            # drain-swap commit point: snapshot the post-drain state, then
-            # truncate the journal (save() records the watermark first, so
-            # a crash between the two replays nothing twice)
-            self.save()
+            # drain-swap commit point: persist what the drain changed (the
+            # watermark is recorded before the commit and the journal only
+            # truncated through it after, so a crash anywhere between
+            # replays nothing twice and loses nothing acknowledged)
+            self._commit_snapshot()
+            self._sync_writer_stats()
         return rows
 
+    # -- durable commits (incremental deltas, background persistence) --------
+
+    def _commit_snapshot(self) -> None:
+        """The per-drain durable commit: a delta of the shards this drain
+        round changed, or a full snapshot when one is due — first commit,
+        ``snapshot_mode='full'``, or the compaction policy firing (K deltas
+        accumulated, or the chain outweighing ``compact_ratio`` of the
+        base). Runs synchronously unless ``background_save`` handed commits
+        to the persister thread."""
+        wm = self.journal.last_seqno
+        dirty = self.writer.dirty_checkpoint_shards()
+        full_due = (self.snapshot_mode == "full"
+                    or self._base_epoch is None
+                    or self._delta_seq >= self.compact_every
+                    or (self._full_bytes > 0 and self._delta_bytes
+                        >= self.compact_ratio * self._full_bytes))
+        if self._persister is not None:
+            self._submit_background(full_due, dirty, wm)
+            return
+        if full_due:
+            self.save()
+            return
+        path = self.index.save_delta(
+            self.storage_dir, shards=dirty, wal_seqno=wm,
+            base_epoch=self._base_epoch, delta_seq=self._delta_seq + 1)
+        self._note_delta(path, self._delta_seq + 1)
+        self.writer.clear_checkpoint_dirty()
+        self._truncate_journal(wm)
+        self.stats.persists += 1
+
+    def _submit_background(self, full: bool, dirty, wm: int) -> None:
+        """Collect sections foreground (the index is mutable again the
+        moment this returns), hand the file I/O to the persister. The
+        epoch/sequence is reserved here so jobs commit in submission order
+        with no allocation race; the dirty set clears at submit — safe
+        because a later job failure poisons the persister, and the only
+        way out of poison is a synchronous full save that captures
+        everything regardless."""
+        from repro.checkpointing.snapshot import (collect_delta_sections,
+                                                  collect_full_sections)
+        from repro.runtime.persister import PersisterPoisoned
+        try:
+            if full:
+                epoch = (self._base_epoch or 0) + 1
+                sections = collect_full_sections(self.index, wm)
+                self._persister.submit(
+                    {"kind": "full", "sections": sections, "epoch": epoch,
+                     "compact": self._delta_seq > 0, "watermark": wm})
+                self._base_epoch = epoch
+                self._delta_seq = 0
+                self._full_bytes = sum(a.nbytes for a in sections.values())
+                self._delta_bytes = 0
+            else:
+                seq = self._delta_seq + 1
+                sections = collect_delta_sections(self.index, wm, dirty,
+                                                  self._base_epoch, seq)
+                self._persister.submit(
+                    {"kind": "delta", "sections": sections,
+                     "base_epoch": self._base_epoch, "seq": seq,
+                     "watermark": wm})
+                self._delta_seq = seq
+                self._delta_bytes += sum(a.nbytes
+                                         for a in sections.values())
+            self.writer.clear_checkpoint_dirty()
+            self.stats.persists += 1
+        except PersisterPoisoned:
+            # a background commit failed: supersede the broken chain with
+            # a synchronous full snapshot (clears the poison) rather than
+            # let acknowledged state ride on the WAL alone indefinitely
+            self.save()
+
+    def _commit_job(self, job: dict) -> None:
+        """The persister worker's half: durable file I/O, then — and only
+        then — WAL truncation through the job's watermark. Truncating here
+        (the commit callback) rather than at submit is what keeps a slow
+        background save from widening the crash window: records appended
+        while the job was in flight survive to the next commit."""
+        from repro.checkpointing.snapshot import (write_delta_snapshot,
+                                                  write_full_snapshot)
+        if job["kind"] == "full":
+            write_full_snapshot(self.storage_dir, job["sections"],
+                                keep=self.snapshot_keep,
+                                epoch=job["epoch"], compact=job["compact"])
+        else:
+            write_delta_snapshot(self.storage_dir, job["sections"],
+                                 job["base_epoch"], job["seq"])
+        from repro.runtime.faultinject import crashpoint
+        crashpoint("truncate.pre")
+        self.journal.truncate_through(job["watermark"])
+        self._durable_watermark = job["watermark"]
+
+    def _truncate_journal(self, wm: int) -> None:
+        """Post-commit journal GC: a quiet journal (nothing appended past
+        the watermark) resets outright; otherwise only records at or below
+        the watermark are dropped."""
+        from repro.runtime.faultinject import crashpoint
+        crashpoint("truncate.pre")
+        if self.journal.last_seqno == wm:
+            self.journal.reset()
+        else:
+            self.journal.truncate_through(wm)
+        self._durable_watermark = wm
+
+    def _note_full(self, path, epoch: int) -> None:
+        self._base_epoch = epoch
+        self._delta_seq = 0
+        self._full_bytes = (path / "index.bin").stat().st_size
+        self._delta_bytes = 0
+
+    def _note_delta(self, path, seq: int) -> None:
+        self._delta_seq = seq
+        self._delta_bytes += (path / "index.bin").stat().st_size
+
+    def _start_persister(self) -> None:
+        if self.background_save and self.storage_dir is not None \
+                and self._persister is None:
+            from repro.runtime.persister import BackgroundPersister
+            self._persister = BackgroundPersister(
+                self._commit_job, max_queue=self.persist_queue)
+
     def save(self):
-        """Commit a durable snapshot of the index (staged queues included)
-        and truncate the journal. Returns the committed snapshot directory.
-        Requires ``storage_dir``; called automatically at every successful
-        drain unless ``snapshot_on_drain=False``."""
+        """Synchronous *full* durable commit: snapshot the whole index
+        (staged queues included), fold any delta chain into the new base,
+        truncate the journal. Returns the committed snapshot directory.
+        Requires ``storage_dir``. This is also the poison-recovery escape:
+        after a failed background commit it supersedes the broken chain and
+        re-enables background persistence."""
         if self.storage_dir is None:
             raise RuntimeError("save() needs storage_dir (durable mode); "
                                "writer-less indexes persist via index.save()")
-        path = self.index.save(self.storage_dir,
-                               wal_seqno=self.journal.last_seqno)
-        self.journal.reset()
+        if self._persister is not None:
+            # settle in-flight commits first; if one failed, this full
+            # snapshot is about to supersede the whole chain anyway
+            self._persister.flush(raise_on_poison=False)
+        wm = self.journal.last_seqno
+        epoch = (self._base_epoch or 0) + 1
+        path = self.index.save(self.storage_dir, wal_seqno=wm,
+                               keep=self.snapshot_keep, epoch=epoch,
+                               compact=self._delta_seq > 0)
+        self._note_full(path, epoch)
+        self.writer.clear_checkpoint_dirty()
+        if self._persister is not None:
+            self._persister.clear_poison()
+        self._truncate_journal(wm)
+        self.stats.persists += 1
         return path
+
+    def flush_durable(self) -> None:
+        """Barrier: return once every submitted background commit is
+        durably on disk (no-op without ``background_save``). Raises
+        ``PersisterPoisoned`` if a background commit failed — call
+        ``save()`` to supersede the broken chain."""
+        if self._persister is not None:
+            self._persister.flush()
+
+    def close(self) -> None:
+        """Stop the background persister (flush + join) and close the
+        journal's file handles. Safe to call more than once; the engine
+        remains queryable, but durable commits stop."""
+        if self._persister is not None:
+            try:
+                self._persister.flush(raise_on_poison=False)
+            finally:
+                self._persister.close()
+            self._persister = None
+        if self.journal is not None:
+            self.journal.close()
 
     @classmethod
     def recover(cls, storage_dir, *, wal_sync: bool = True,
                 snapshot_on_recover: bool = True, **kwargs) -> "QueryEngine":
         """Rebuild an engine from a durable directory after a crash: load
-        the latest committed snapshot (uncommitted partials are ignored),
-        replay the journal suffix through a fresh writer, and re-attach the
-        journal so subsequent writes stay durable. ``snapshot_on_recover``
-        immediately collapses snapshot + replayed journal into a fresh
-        committed base. Extra ``kwargs`` configure the engine as usual
-        (``storage_dir`` comes from the first argument)."""
+        the latest committed snapshot plus its delta chain (uncommitted
+        partials are ignored, a gapped chain is refused), replay the
+        journal suffix through a fresh writer, and re-attach the journal so
+        subsequent writes stay durable. ``snapshot_on_recover`` immediately
+        collapses base + deltas + replayed journal into a fresh committed
+        full base. Extra ``kwargs`` configure the engine as usual
+        (``storage_dir`` comes from the first argument; ``background_save``
+        et al. apply to the recovered engine too)."""
         if "storage_dir" in kwargs or "writer" in kwargs:
             raise ValueError("recover() derives storage_dir and writer from "
                              "the durable directory itself")
@@ -569,16 +757,44 @@ class QueryEngine:
             writer = MaintenanceWriter(idx)
             writer.journal = journal
         eng = cls(idx, writer=writer, **kwargs)
-        eng.storage_dir = _Path(storage_dir)
-        eng.journal = journal
+        eng._adopt_storage(_Path(storage_dir), journal)
         eng._sync_writer_stats()
         if snapshot_on_recover:
             eng.save()
         return eng
 
+    def _adopt_storage(self, root, journal) -> None:
+        """Attach existing durable state (the recover() path): pick up the
+        on-disk base epoch, delta chain position, and byte counters so the
+        compaction policy resumes where the crashed process left off."""
+        from repro.checkpointing.snapshot import latest_delta_seq, latest_epoch
+        self.storage_dir = root
+        self.journal = journal
+        if self.writer.journal is None:
+            self.writer.journal = journal
+        self._base_epoch = latest_epoch(root)
+        self._delta_seq = (latest_delta_seq(root, self._base_epoch)
+                           if self._base_epoch is not None else 0)
+        if self._base_epoch is not None:
+            self._full_bytes = (root / f"snap_{self._base_epoch}"
+                                / "index.bin").stat().st_size
+            self._delta_bytes = sum(
+                (root / f"delta_{self._base_epoch}_{k}"
+                 / "index.bin").stat().st_size
+                for k in range(1, self._delta_seq + 1))
+        # until the next commit records a watermark, persist_lag honestly
+        # reports the whole surviving journal as not-yet-snapshotted
+        self._durable_watermark = 0
+        self._start_persister()
+
     def _sync_writer_stats(self) -> None:
         w = self.writer
         st = self.stats
+        if self.journal is not None:
+            st.persist_lag = max(0, self.journal.last_seqno
+                                 - self._durable_watermark)
+        if self._persister is not None:
+            st.persist_pending = self._persister.pending
         st.drains = w.stats.drains
         st.drained_rows = w.stats.drained_rows
         st.drain_us = w.stats.total_drain_us

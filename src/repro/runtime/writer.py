@@ -77,6 +77,7 @@ from repro.core import index as hix
 from repro.core import learned as ln
 from repro.core.partition import (SUMMARY_POLICIES, ShardedHippoState,
                                   set_shard, shard_state, summary_of)
+from repro.runtime.faultinject import crashpoint
 
 _STAGE_BUCKET_MIN = 8   # smallest device overlay width (trace bucketing)
 
@@ -181,6 +182,12 @@ class MaintenanceWriter:
         self._pending_bounds: np.ndarray | None = None
         self._pending_model = None   # learned model behind the pending bounds
         self._resum_epoch = 0
+        # Shards whose published state/table slab changed since the last
+        # durable commit — exactly what an incremental delta must capture
+        # (checkpointing.snapshot.save_delta). Fed by every mutation that
+        # survives: drain swaps, vacuums, resummarize remaps, and deletes
+        # (which flip validity bits across arbitrary shards' slabs).
+        self._dirty_since_checkpoint: set[int] = set()
 
     # -- staging (the off-query-path write surface) --------------------------
 
@@ -246,6 +253,9 @@ class MaintenanceWriter:
         spec = self.index.spec
         was_fresh = table._dev_shard is not None and not table._dev_shard_stale
         n = table.delete_where(lo, hi)
+        if n:
+            self._dirty_since_checkpoint.update(
+                int(s) for s in self.index.dirty_shards())
         if n and was_fresh:
             # every mutated page carries a dirty note until its vacuum, so
             # the dirty owners are exactly the slabs to patch
@@ -289,6 +299,14 @@ class MaintenanceWriter:
         """Drain units outstanding (resummarizes + insert queues + vacuums)."""
         return (len(self._pending_resummarize) + len(self.pending_shards())
                 + len(self.pending_vacuum_shards()))
+
+    def dirty_checkpoint_shards(self) -> list[int]:
+        """Shards changed since the last durable commit (delta capture set)."""
+        return sorted(self._dirty_since_checkpoint)
+
+    def clear_checkpoint_dirty(self) -> None:
+        """Mark the current state durably captured (commit just happened)."""
+        self._dirty_since_checkpoint.clear()
 
     # -- drift re-summarization (the third drain-unit kind) ------------------
 
@@ -529,6 +547,7 @@ class MaintenanceWriter:
                                       jnp.int32(int(p)))
             # atomic swap: one assignment publishes the rebuilt slice +
             # refreshed summary; every other shard's arrays are untouched
+            crashpoint("drain.pre_swap")
             idx.state = ShardedHippoState(
                 shards=set_shard(idx.state.shards, s, st),
                 summaries=idx.state.summaries.at[s].set(summary_of(st)))
@@ -541,6 +560,7 @@ class MaintenanceWriter:
         self._staged_total -= len(q.values)
         self._version += 1
         self._dev_cache = None
+        self._dirty_since_checkpoint.add(s)
         if was_fresh:
             table.refresh_shard_slabs([s], spec.num_shards,
                                       spec.pages_per_shard)
@@ -557,6 +577,8 @@ class MaintenanceWriter:
             n = idx._vacuum_shard_locked(s)
         finally:
             idx.swap_in_flight = None
+        if n:
+            self._dirty_since_checkpoint.add(s)
         self.stats.vacuums += 1
         return n
 
@@ -596,6 +618,7 @@ class MaintenanceWriter:
         finally:
             idx.swap_in_flight = None
         idx.bounds_epochs[s] = self._resum_epoch
+        self._dirty_since_checkpoint.add(s)
         models = getattr(idx, "summary_models", None)
         if models is not None:
             # shard s now serves the pending bounds: its model (None under

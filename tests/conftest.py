@@ -1,7 +1,7 @@
 """Shared pytest configuration: test tiers.
 
 Tier-1 (everything): ``PYTHONPATH=src python -m pytest -x -q``
-Fast inner loop:     ``PYTHONPATH=src python -m pytest -x -q -m "not slow and not shard and not writer and not compact and not drift and not bench and not learned and not persist"``
+Fast inner loop:     ``PYTHONPATH=src python -m pytest -x -q -m "not slow and not shard and not writer and not compact and not drift and not bench and not learned and not persist and not fault"``
 Partition suite:     ``PYTHONPATH=src python -m pytest -x -q -m shard``
 Writer suite:        ``PYTHONPATH=src python -m pytest -x -q -m writer``
 Compact suite:       ``PYTHONPATH=src python -m pytest -x -q -m compact``
@@ -9,6 +9,7 @@ Drift suite:         ``PYTHONPATH=src python -m pytest -x -q -m drift``
 Bench gate:          ``PYTHONPATH=src python -m pytest -x -q -m bench``
 Learned suite:       ``PYTHONPATH=src python -m pytest -x -q -m learned``
 Persistence suite:   ``PYTHONPATH=src python -m pytest -x -q -m persist``
+Fault suite:         ``PYTHONPATH=src python -m pytest -x -q -m fault``
 
 ``slow`` marks the model/launch/system modules that compile transformer steps
 or fork subprocess meshes; ``shard`` marks the partition-layer suite (many
@@ -29,7 +30,11 @@ suite); ``persist`` marks the durable-storage suite
 (``tests/test_persistence.py`` — snapshot round-trip equivalence, WAL
 crash-injection recovery, binary-layout corruption handling — builds and
 recovers full sharded engines, so it compiles stacked-state traces and
-does real disk I/O). Excluding all eight keeps the core
+does real disk I/O); ``fault`` marks the self-healing supervisor suite
+(``tests/test_fault_recovery.py`` — a crash injected at every registered
+``faultinject.SITES`` crash point recovers via ``resilient_serve`` with no
+operator action — same stacked-state compile + disk I/O cost as the
+persist suite). Excluding all nine keeps the core
 index/kernel/maintenance inner loop well under a minute. The markers are documented in README.md, and
 ``scripts/check_markers.py`` fails the build if a test module uses a marker
 that is not registered below.
@@ -86,3 +91,12 @@ def pytest_configure(config):
         "snapshot + journal replay, section-container corruption handling); "
         "builds full sharded engines and does real disk I/O — run just "
         "these with -m persist")
+    config.addinivalue_line(
+        "markers",
+        "fault: self-healing recovery tests (tests/test_fault_recovery.py "
+        "— crashes injected at every faultinject.SITES crash point, "
+        "watchdog hang-restart, retry-budget exhaustion, background-"
+        "persister poisoning; resilient_serve must recover to exactly the "
+        "acknowledged counts with no operator action); builds and "
+        "re-recovers durable engines repeatedly — run just these with "
+        "-m fault")

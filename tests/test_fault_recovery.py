@@ -1,0 +1,297 @@
+"""Self-healing recovery: every registered crash site, supervised.
+
+The acceptance contract of the fault-injection harness
+(``repro.runtime.faultinject``) plus the engine supervisor
+(``repro.runtime.fault.resilient_serve``):
+
+- A crash injected at **every** site in ``faultinject.SITES`` — journal
+  append, drain swap, delta commit, full-snapshot commit, compaction
+  fold, journal truncation, and mid-background-save — recovers to exactly
+  the acknowledged counts with **no operator action**: the supervisor
+  rebuilds the engine from durable state itself (or, for a background
+  commit failure, the engine's poison fallback supersedes the broken
+  chain with a synchronous full snapshot).
+- The workload is resumption-aware (a cursor advances only on
+  acknowledged operations), so recovered counts are checked bit-identical
+  against the brute-force count over the acknowledged multiset — no
+  acknowledged write lost, no record double-applied.
+- The watchdog path: a flagged hang tears the step down through the same
+  restart machinery a crash uses; the retry budget re-raises once
+  exhausted.
+
+Completeness is enforced structurally: the crash-site sweep is
+parametrized over ``faultinject.SITES`` itself, so registering a new
+crash point without mapping it to an engine configuration here fails the
+suite rather than silently going uncovered.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.partition import ShardedHippoIndex
+from repro.core.predicate import Predicate
+from repro.runtime.fault import ServeStats, StepWatchdog, resilient_serve
+from repro.runtime.faultinject import (SITES, CrashPoints, InjectedCrash,
+                                       crash_points)
+from repro.runtime.engine import QueryEngine
+from repro.storage.table import PagedTable
+
+pytestmark = pytest.mark.fault
+
+
+@pytest.fixture(autouse=True)
+def _clean_crash_points():
+    crash_points.reset()
+    yield
+    crash_points.reset()
+
+
+def make_sidx(values, num_shards=4):
+    table = PagedTable.from_values(np.asarray(values).copy(), page_card=8,
+                                   spare_pages=256)
+    return ShardedHippoIndex.create(table, num_shards=num_shards,
+                                    resolution=32, density=0.25)
+
+
+def preds():
+    return [
+        Predicate(lo=5.0, hi=1.0),
+        Predicate.between(20.0, 24.0),
+        Predicate.between(100.0, 115.0),
+        Predicate.between(80.0, 125.0),
+        Predicate.between(-1e30, 1e30),
+    ]
+
+
+def value_brute(values, ps):
+    v = np.asarray(values, np.float32)
+    return np.asarray([((v >= p.lo) & (v <= p.hi)).sum() for p in ps],
+                      np.int64)
+
+
+_ENGINE_KW = dict(batch=8, drain_policy="manual", auto_resummarize=False)
+
+# Site -> the durable-engine configuration whose commit path actually
+# executes that site. Parametrizing over SITES itself keeps this mapping
+# complete by construction: a newly registered site with no entry here
+# fails the sweep instead of going untested.
+_SITE_CONFIG = {
+    "wal.pre_append": {},
+    "drain.pre_swap": {},
+    "delta.pre_commit": {},                      # default incremental path
+    "snapshot.pre_commit": {"snapshot_mode": "full"},
+    "compact.pre_commit": {"compact_every": 2},  # 3rd commit folds the chain
+    "truncate.pre": {},
+    "persist.in_flight": {"background_save": True},
+}
+
+# Sites whose injected crash surfaces in the *foreground* (the serving
+# loop sees the exception and must restart). persist.in_flight fires on
+# the persister's worker thread: the failure poisons the persister and
+# the engine self-heals through the synchronous-full-save fallback with
+# no restart at all.
+_FOREGROUND_SITES = frozenset(SITES) - {"persist.in_flight"}
+
+
+def _acked_workload(values, acked, chunk=6):
+    """A resumption-aware ingest client: the cursor advances only when a
+    write returns (= was acknowledged), exactly what a real client
+    replaying un-acked requests does; each step flushes (drain + durable
+    commit)."""
+    cursor = {"i": 0}
+
+    def workload(eng):
+        end = min(cursor["i"] + chunk, len(values))
+        while cursor["i"] < end:
+            v = values[cursor["i"]]
+            eng.write(v)                 # raises => not acknowledged
+            acked.append(v)
+            cursor["i"] += 1
+        eng.flush()
+        return cursor["i"] >= len(values)
+
+    return workload
+
+
+@pytest.mark.parametrize("site", SITES)
+def test_crash_at_every_registered_site_self_heals(tmp_path, site):
+    """Kill -9 (via InjectedCrash) at each registered crash site; the
+    supervisor (or the poison fallback) must land the engine on exactly
+    the acknowledged counts with no operator involvement."""
+    assert site in _SITE_CONFIG, \
+        f"new crash site {site!r} registered without fault-test coverage"
+    rng = np.random.default_rng(SITES.index(site))
+    base = np.sort(rng.uniform(0, 100, 160))
+    root = tmp_path / "dur"
+    kw = dict(_ENGINE_KW, **_SITE_CONFIG[site])
+    eng = QueryEngine(make_sidx(base), storage_dir=root, **kw)
+
+    writes = [float(v) for v in rng.uniform(100, 130, 36)]
+    acked: list[float] = []
+    # arm *after* the engine's initial base snapshot so the injected shot
+    # lands on the serving loop's path, not engine construction
+    crash_points.arm(site, times=1)
+    eng2, stats = resilient_serve(
+        root, _acked_workload(writes, acked), engine=eng,
+        recover_kwargs=dict(kw), max_restarts=6, backoff_base_s=0.001)
+
+    assert crash_points.fired(site) >= 1, \
+        f"{site} was never on the executed path — the test proved nothing"
+    if site in _FOREGROUND_SITES:
+        assert stats.crashes + stats.hangs >= 1
+        assert stats.restores >= 1, "the supervisor never rebuilt the engine"
+    else:
+        # background-save failure: poisoned persister, healed by the
+        # engine's synchronous-full-save fallback — no restart needed
+        assert stats.restores == 0
+        eng2.flush_durable()     # chain superseded: barrier must be clean
+    eng2.flush()
+    ps = preds()
+    np.testing.assert_array_equal(
+        eng2.run_all(ps), value_brute(list(base) + acked, ps),
+        err_msg=f"recovered counts diverge from acknowledged state "
+                f"after a crash at {site}")
+    # recovery from disk alone once more: the durable state itself (not
+    # the surviving engine object) carries the acknowledged counts
+    eng2.close()
+    eng3 = QueryEngine.recover(root, snapshot_on_recover=False,
+                               wal_sync=False, **_ENGINE_KW)
+    eng3.flush()
+    np.testing.assert_array_equal(eng3.run_all(ps),
+                                  value_brute(list(base) + acked, ps))
+
+
+def test_watchdog_hang_restarts_through_the_same_path(tmp_path):
+    """A watchdog-flagged hang (not an exception) must tear the engine
+    down and rebuild from durable state exactly like a crash."""
+    rng = np.random.default_rng(11)
+    base = np.sort(rng.uniform(0, 100, 120))
+    root = tmp_path / "dur"
+    eng = QueryEngine(make_sidx(base), storage_dir=root, **_ENGINE_KW)
+    writes = [float(v) for v in rng.uniform(100, 120, 8)]
+    for v in writes:
+        eng.write(v)
+    eng.flush()          # acknowledged + durable before the hang
+
+    hung = {"done": False}
+
+    def workload(e):
+        # steps are pure sleeps so jit-compile noise cannot skew the
+        # watchdog's median; the engine state rides along untouched
+        if not hung["done"] and len(wd.times) >= 3:
+            hung["done"] = True
+            time.sleep(0.5)          # the hang: >> 3x the ~2ms median
+        else:
+            time.sleep(0.002)
+        return hung["done"] and len(wd.times) >= 5
+
+    wd = StepWatchdog(threshold=3.0, window=8, min_samples=3)
+    eng2, stats = resilient_serve(root, workload, engine=eng,
+                                  recover_kwargs=dict(_ENGINE_KW),
+                                  watchdog=wd, max_restarts=3,
+                                  backoff_base_s=0.001)
+    assert stats.hangs >= 1, "the slow step was never flagged"
+    assert stats.restores >= 1, "a flagged hang must restart the engine"
+    assert stats.crashes == 0, "a hang is not a crash in the stats"
+    ps = preds()
+    np.testing.assert_array_equal(eng2.run_all(ps),
+                                  value_brute(list(base) + writes, ps))
+
+
+def test_retry_budget_exhaustion_reraises(tmp_path):
+    """A workload that keeps dying must eventually surface its failure
+    instead of looping forever."""
+    rng = np.random.default_rng(12)
+    base = np.sort(rng.uniform(0, 100, 80))
+    root = tmp_path / "dur"
+    eng = QueryEngine(make_sidx(base), storage_dir=root, **_ENGINE_KW)
+
+    calls = {"n": 0}
+
+    def doomed(e):
+        calls["n"] += 1
+        raise RuntimeError("unrecoverable workload bug")
+
+    with pytest.raises(RuntimeError, match="unrecoverable"):
+        resilient_serve(root, doomed, engine=eng,
+                        recover_kwargs=dict(_ENGINE_KW), max_restarts=2,
+                        backoff_base_s=0.001)
+    assert calls["n"] == 3       # initial attempt + 2 budgeted restarts
+
+
+def test_backoff_grows_exponentially_and_caps(tmp_path):
+    """The restart delay doubles per restart and clamps at the cap; the
+    injected sleep records exactly what the supervisor decided."""
+    rng = np.random.default_rng(13)
+    base = np.sort(rng.uniform(0, 100, 80))
+    root = tmp_path / "dur"
+    eng = QueryEngine(make_sidx(base), storage_dir=root, **_ENGINE_KW)
+
+    delays: list[float] = []
+    remaining = {"n": 4}
+
+    def flaky(e):
+        if remaining["n"]:
+            remaining["n"] -= 1
+            raise RuntimeError("transient")
+        return True
+
+    _, stats = resilient_serve(root, flaky, engine=eng,
+                               recover_kwargs=dict(_ENGINE_KW),
+                               max_restarts=8, backoff_base_s=0.01,
+                               backoff_cap_s=0.04, sleep=delays.append)
+    assert delays == [0.01, 0.02, 0.04, 0.04]
+    assert stats.backoff_s == pytest.approx(sum(delays))
+    assert stats.crashes == 4 and stats.restores == 4
+
+
+# ---------------------------------------------------------------------------
+# Harness units: the registry and the watchdog window
+# ---------------------------------------------------------------------------
+
+def test_crash_points_arm_fires_exactly_n_times():
+    cp = CrashPoints()
+    cp.arm("truncate.pre", times=2)
+    for _ in range(2):
+        with pytest.raises(InjectedCrash) as ei:
+            cp.hit("truncate.pre")
+        assert ei.value.site == "truncate.pre"
+    cp.hit("truncate.pre")        # disarmed: passes through
+    assert cp.fired("truncate.pre") == 2
+    assert cp.fired("wal.pre_append") == 0
+
+
+def test_crash_points_rejects_unknown_sites():
+    cp = CrashPoints()
+    with pytest.raises(ValueError, match="unknown crash site"):
+        cp.arm("no.such.site")
+    with pytest.raises(ValueError, match="unknown crash site"):
+        cp.hit("no.such.site")
+    with pytest.raises(ValueError, match=">= 1"):
+        cp.arm("truncate.pre", times=0)
+
+
+def test_crash_points_reset_isolates_tests():
+    cp = CrashPoints()
+    cp.arm("drain.pre_swap")
+    with pytest.raises(InjectedCrash):
+        cp.hit("drain.pre_swap")
+    cp.reset()
+    cp.hit("drain.pre_swap")      # disarmed
+    assert cp.fired("drain.pre_swap") == 0
+
+
+def test_watchdog_window_is_bounded_deque():
+    """Satellite regression: the observation window must be a
+    maxlen-bounded deque (O(1) admission), never an unbounded list popped
+    at the head, and flagging semantics must survive the switch."""
+    from collections import deque
+    wd = StepWatchdog(threshold=2.0, window=16, min_samples=3)
+    assert isinstance(wd.times, deque) and wd.times.maxlen == 16
+    for i in range(100):
+        wd.observe(i, 0.01)
+    assert len(wd.times) == 16        # bounded, oldest evicted
+    assert wd.observe(100, 0.05) is True       # 5x the 0.01 median
+    assert wd.flagged and wd.flagged[-1][0] == 100
+    assert wd.observe(101, 0.012) is False

@@ -32,9 +32,11 @@ from repro.checkpointing.checkpoint import restore_checkpoint, save_checkpoint
 from repro.checkpointing.layout import (CorruptSnapshotError, pack_sections,
                                         read_section_file, unpack_sections,
                                         write_section_file)
-from repro.checkpointing.snapshot import (disk_usage, latest_epoch,
+import repro.checkpointing.snapshot as snap_mod
+from repro.checkpointing.snapshot import (delta_chain, disk_usage,
+                                          latest_delta_seq, latest_epoch,
                                           load_index, recover_index,
-                                          save_index)
+                                          save_delta, save_index)
 from repro.checkpointing.wal import Journal
 from repro.core.partition import ShardedHippoIndex
 from repro.core.predicate import Predicate
@@ -471,3 +473,212 @@ def test_journal_ignores_torn_tail_and_keeps_seqnos_monotonic(tmp_path):
     j2.append_insert(0, 9.0)
     assert j2.replay()[0].seqno > 5, \
         "seqnos must keep increasing across reset() or watermarks break"
+
+
+def test_truncate_through_drops_only_at_or_below_watermark(tmp_path):
+    """The background persister's watermark-aware journal GC: records past
+    the watermark survive byte-identically (a fresh Journal re-reads them
+    and resumes seqnos after them); records at or below it are gone."""
+    j = Journal(tmp_path, 2, sync=False)
+    for i in range(6):
+        j.append_insert(i % 2, float(i))
+    j.append_delete(1.0, 2.0)                                   # seqno 7
+    bounds = np.linspace(0.0, 1.0, 9).astype(np.float32)
+    j.append_resummarize(bounds, "learned")                     # seqno 8
+    j.truncate_through(5)
+    assert [r.seqno for r in j.replay()] == [6, 7, 8]
+    j2 = Journal(tmp_path, 2, sync=False)       # fresh scan of the rewrite
+    recs = j2.replay()
+    assert [r.seqno for r in recs] == [6, 7, 8]
+    assert j2.last_seqno == 8, "seqno allocation must resume after survivors"
+    assert (recs[1].lo, recs[1].hi) == (1.0, 2.0)
+    assert recs[2].policy == "learned"
+    np.testing.assert_array_equal(recs[2].bounds, bounds)
+    j2.truncate_through(100)
+    assert j2.replay() == [], "a watermark past everything empties the logs"
+
+
+# ---------------------------------------------------------------------------
+# Incremental snapshots: delta chains, compaction, tombstone pruning
+# ---------------------------------------------------------------------------
+
+def test_delta_round_trip_counts_and_rows_bit_identical(tmp_path):
+    """A full snapshot + one delta capturing the drained/vacuumed shards
+    loads to exactly the live index's counts and row ids — and to brute
+    force over the surviving value multiset."""
+    rng = np.random.default_rng(21)
+    base = np.sort(rng.uniform(0, 100, 300))
+    idx = make_sidx(base)
+    w = MaintenanceWriter(idx)
+    save_index(tmp_path, idx, wal_seqno=0)
+    vals = [float(v) for v in base]
+    for v in rng.uniform(100.0, 128.0, 40):
+        w.write(float(v))
+        vals.append(float(v))
+    w.flush()
+    w.delete(10.0, 14.0)       # validity flips outside the drained shards
+    vals = [v for v in vals if not 10.0 <= v <= 14.0]
+    w.flush()
+    shards = w.dirty_checkpoint_shards()
+    assert shards, "drains and deletes must mark their shards dirty"
+    save_delta(tmp_path, idx, shards=shards)
+    assert latest_delta_seq(tmp_path, latest_epoch(tmp_path)) == 1
+
+    idx2, meta = load_index(tmp_path)
+    assert meta["deltas"] == 1
+    ps = preds()
+    counts1, rows1 = engine_counts_and_rows(idx, w, ps)
+    counts2, rows2 = engine_counts_and_rows(idx2, None, ps)
+    np.testing.assert_array_equal(counts2, counts1)
+    for a, b in zip(rows1, rows2):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(counts2, value_brute(vals, ps))
+
+
+def test_delta_chain_gap_is_refused(tmp_path):
+    """A committed delta k without every committed delta below it means a
+    skipped commit; replaying across the hole would silently lose shards —
+    loading must refuse."""
+    import shutil
+    rng = np.random.default_rng(22)
+    idx = make_sidx(np.sort(rng.uniform(0, 100, 200)))
+    w = MaintenanceWriter(idx)
+    save_index(tmp_path, idx, wal_seqno=0)
+    for k in range(2):
+        for v in rng.uniform(100.0, 120.0, 8):
+            w.write(float(v))
+        w.flush()
+        save_delta(tmp_path, idx, shards=w.dirty_checkpoint_shards())
+        w.clear_checkpoint_dirty()
+    assert latest_delta_seq(tmp_path, 1) == 2
+    shutil.rmtree(tmp_path / "delta_1_1")
+    with pytest.raises(CorruptSnapshotError, match="delta chain"):
+        load_index(tmp_path)
+    with pytest.raises(CorruptSnapshotError, match="delta chain"):
+        delta_chain(tmp_path, 1)
+
+
+def test_prune_renames_to_tombstone_before_rmtree(tmp_path, monkeypatch):
+    """Satellite regression: pruning must rename a doomed snapshot to
+    ``*.tombstone`` *before* deleting it, so a crash mid-prune (simulated
+    by an rmtree that never runs) leaves no discoverable directory that
+    still carries a COMMITTED sentinel — and the next save sweeps the
+    leftover tombstone."""
+    rng = np.random.default_rng(23)
+    idx = make_sidx(np.sort(rng.uniform(0, 100, 160)))
+    save_index(tmp_path, idx, keep=1)          # snap_1
+    monkeypatch.setattr(snap_mod.shutil, "rmtree",
+                        lambda *a, **k: None)   # crash: delete never lands
+    save_index(tmp_path, idx, keep=1)          # snap_2 prunes snap_1
+    monkeypatch.undo()
+
+    tomb = tmp_path / "snap_1.tombstone"
+    assert tomb.exists(), "prune must rename before any rmtree"
+    assert (tomb / "COMMITTED").exists(), \
+        "setup rot: the crash should leave the sentinel inside the tombstone"
+    assert not (tmp_path / "snap_1").exists()
+    assert latest_epoch(tmp_path) == 2, \
+        "a tombstoned COMMITTED sentinel must be invisible to discovery"
+    idx2, _ = load_index(tmp_path)             # loads snap_2, not the tomb
+    ps = preds()
+    c1, _ = engine_counts_and_rows(idx, None, ps)
+    c2, _ = engine_counts_and_rows(idx2, None, ps)
+    np.testing.assert_array_equal(c2, c1)
+
+    save_index(tmp_path, idx, keep=1)          # snap_3: sweeps the leftover
+    assert not tomb.exists(), "the next save must sweep crash tombstones"
+
+
+def test_prune_drops_a_superseded_base_with_its_delta_chain(tmp_path):
+    """Compaction hygiene: when an old full base falls out of ``keep``,
+    its deltas go with it — they are unreadable without their base."""
+    rng = np.random.default_rng(24)
+    idx = make_sidx(np.sort(rng.uniform(0, 100, 200)))
+    w = MaintenanceWriter(idx)
+    save_index(tmp_path, idx, keep=1)          # snap_1
+    for v in rng.uniform(100.0, 120.0, 8):
+        w.write(float(v))
+    w.flush()
+    save_delta(tmp_path, idx, shards=w.dirty_checkpoint_shards())
+    w.clear_checkpoint_dirty()
+    save_index(tmp_path, idx, keep=1, compact=True)   # snap_2 folds chain
+    names = {p.name for p in tmp_path.iterdir()}
+    assert "snap_2" in names
+    assert "snap_1" not in names and "delta_1_1" not in names, \
+        "a pruned base must take its delta chain with it"
+
+
+def test_incremental_engine_builds_chain_then_compacts(tmp_path):
+    """Engine e2e on the default incremental mode: each drain commits a
+    delta ≪ the full base, the K policy folds the chain into a fresh full
+    snapshot, and recovery off the chain is bit-identical to brute force."""
+    rng = np.random.default_rng(25)
+    base = np.sort(rng.uniform(0, 100, 200))
+    root = tmp_path / "dur"
+    idx = make_sidx(base)
+    eng = QueryEngine(idx, batch=8, drain_policy="manual",
+                      auto_resummarize=False, storage_dir=root,
+                      compact_every=3, compact_ratio=1e9)  # isolate K policy
+    vals = [float(v) for v in base]
+    for step in range(4):
+        for v in rng.uniform(100.0, 130.0, 8):
+            eng.write(float(v))
+            vals.append(float(v))
+        eng.flush()
+    names = {p.name for p in root.iterdir() if p.is_dir()}
+    assert {"snap_1", "delta_1_1", "delta_1_2", "delta_1_3",
+            "snap_2"} <= names, f"unexpected chain layout: {sorted(names)}"
+    full = (root / "snap_1" / "index.bin").stat().st_size
+    for k in range(1, 4):
+        d = (root / f"delta_1_{k}" / "index.bin").stat().st_size
+        assert d < full, \
+            f"delta_{k} ({d}B) should be smaller than its base ({full}B)"
+    assert eng.stats.persists == 5          # initial full + 3 deltas + fold
+    assert eng.stats.persist_lag == 0
+
+    del eng
+    eng2 = _recover(root)
+    eng2.flush()
+    ps = preds()
+    np.testing.assert_array_equal(eng2.run_all(ps), value_brute(vals, ps))
+
+
+def test_background_save_poison_falls_back_to_sync_full(tmp_path,
+                                                        monkeypatch):
+    """A failed background commit poisons the persister (queued commits
+    must not leapfrog a hole in the chain); flush_durable surfaces it, and
+    the next drain commit self-heals through a synchronous full snapshot
+    that supersedes the broken chain and re-enables background saves."""
+    from repro.runtime.persister import PersisterPoisoned
+    rng = np.random.default_rng(26)
+    base = np.sort(rng.uniform(0, 100, 200))
+    root = tmp_path / "dur"
+    eng = QueryEngine(make_sidx(base), batch=8, drain_policy="manual",
+                      auto_resummarize=False, storage_dir=root,
+                      background_save=True)
+    vals = [float(v) for v in base]
+
+    def boom(*a, **k):
+        raise _Boom("disk full")
+    monkeypatch.setattr(snap_mod, "write_delta_snapshot", boom)
+    for v in rng.uniform(100.0, 120.0, 8):
+        eng.write(float(v))
+        vals.append(float(v))
+    eng.flush()                      # delta job fails on the worker thread
+    with pytest.raises(PersisterPoisoned):
+        eng.flush_durable()
+    assert eng._persister.stats.failed == 1
+    monkeypatch.undo()
+
+    for v in rng.uniform(120.0, 130.0, 8):
+        eng.write(float(v))
+        vals.append(float(v))
+    eng.flush()                      # poisoned submit -> sync full fallback
+    eng.flush_durable()              # clean: the chain was superseded
+    assert not eng._persister.poisoned
+
+    eng.close()
+    eng2 = _recover(root)
+    eng2.flush()
+    ps = preds()
+    np.testing.assert_array_equal(eng2.run_all(ps), value_brute(vals, ps))
