@@ -1,14 +1,11 @@
 """Fail when a test module uses a pytest marker the suite never declared.
 
-The tiered test suite routes on markers (slow / shard / writer / compact /
-drift, registered in ``tests/conftest.py``), and pytest only *warns* on an
-unknown marker — so a typo'd or undeclared marker silently drops a module
-out of every ``-m`` tier and the mistake rots. This checker walks every
-``tests/*.py`` module's AST for ``pytest.mark.<name>`` uses (decorators,
-``pytestmark`` assignments, ``pytest.param`` marks alike — anything spelled
-``pytest.mark.X``) and compares them against the markers declared via
-``config.addinivalue_line("markers", ...)`` in the conftest, plus pytest's
-built-ins. Run standalone or through ``tests/test_markers.py``:
+Thin wrapper: the implementation moved into ``repro.analysis.markers``
+(the ``markers`` pass of hippolint — ``python scripts/lint.py markers``
+runs the same check), and this entrypoint plus its public API
+(``BUILTIN_MARKERS`` / ``declared_markers`` / ``used_markers`` /
+``find_offenders`` / ``main``) stay put for CI and
+``tests/test_markers.py``:
 
   python scripts/check_markers.py [tests_dir]
 
@@ -16,72 +13,16 @@ Exit status 1 lists every (file, marker) offender.
 """
 from __future__ import annotations
 
-import ast
 import pathlib
 import sys
 
-# Markers pytest itself defines; always allowed.
-BUILTIN_MARKERS = {
-    "parametrize", "skip", "skipif", "xfail", "usefixtures",
-    "filterwarnings", "tryfirst", "trylast",
-}
+_REPO = pathlib.Path(__file__).resolve().parent.parent
+if str(_REPO / "src") not in sys.path:
+    sys.path.insert(0, str(_REPO / "src"))
 
-
-def declared_markers(conftest_path: pathlib.Path) -> set[str]:
-    """Markers registered via ``config.addinivalue_line("markers", "<name>:
-    <description>")`` in a conftest, extracted from its AST."""
-    tree = ast.parse(conftest_path.read_text())
-    out: set[str] = set()
-    for node in ast.walk(tree):
-        if (isinstance(node, ast.Call)
-                and isinstance(node.func, ast.Attribute)
-                and node.func.attr == "addinivalue_line"
-                and len(node.args) == 2
-                and isinstance(node.args[0], ast.Constant)
-                and node.args[0].value == "markers"
-                and isinstance(node.args[1], ast.Constant)):
-            decl = str(node.args[1].value)
-            out.add(decl.split(":", 1)[0].strip().split("(", 1)[0].strip())
-    return out
-
-
-def used_markers(test_path: pathlib.Path) -> set[str]:
-    """Every ``pytest.mark.<name>`` attribute chain in a module's AST."""
-    tree = ast.parse(test_path.read_text())
-    out: set[str] = set()
-    for node in ast.walk(tree):
-        if (isinstance(node, ast.Attribute)
-                and isinstance(node.value, ast.Attribute)
-                and node.value.attr == "mark"
-                and isinstance(node.value.value, ast.Name)
-                and node.value.value.id == "pytest"):
-            out.add(node.attr)
-    return out
-
-
-def find_offenders(tests_dir: pathlib.Path) -> list[tuple[str, str]]:
-    """(file, marker) pairs for every undeclared, non-builtin marker use."""
-    allowed = BUILTIN_MARKERS | declared_markers(tests_dir / "conftest.py")
-    offenders = []
-    for path in sorted(tests_dir.glob("*.py")):
-        for marker in sorted(used_markers(path) - allowed):
-            offenders.append((path.name, marker))
-    return offenders
-
-
-def main(argv: list[str] | None = None) -> int:
-    args = sys.argv[1:] if argv is None else argv
-    tests_dir = pathlib.Path(args[0]) if args else (
-        pathlib.Path(__file__).resolve().parent.parent / "tests")
-    offenders = find_offenders(tests_dir)
-    for name, marker in offenders:
-        print(f"{name}: marker {marker!r} is not declared in conftest.py "
-              f"(register it in pytest_configure or fix the typo)")
-    if offenders:
-        return 1
-    print(f"ok: every marker under {tests_dir} is declared")
-    return 0
-
+from repro.analysis.markers import (BUILTIN_MARKERS,  # noqa: E402,F401
+                                    declared_markers, find_offenders, main,
+                                    used_markers)
 
 if __name__ == "__main__":
     sys.exit(main())

@@ -1,0 +1,64 @@
+"""hippolint CLI — run the static invariant passes over the repo.
+
+  python scripts/lint.py --all                 # every pass
+  python scripts/lint.py locks crash           # a subset
+  python scripts/lint.py --all --root <dir>    # another checkout
+
+Exit 0 when the tree is clean (info-severity findings — the dead-seed
+audit — are reported but never fail). Exit 1 with one
+``path:line: [pass] message`` per finding otherwise. Suppress a
+deliberate exception inline, justification mandatory::
+
+    os.replace(d, tomb)  # hippolint: disable=crash -- <why this is safe>
+
+Pass semantics and the annotation grammar are documented in
+``docs/analysis.md``.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+if str(REPO / "src") not in sys.path:
+    sys.path.insert(0, str(REPO / "src"))
+
+from repro.analysis import PASSES, load_context, run_passes  # noqa: E402
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("passes", nargs="*", metavar="pass",
+                    help=f"passes to run (default: --all); "
+                         f"one of: {', '.join(PASSES)}")
+    ap.add_argument("--all", action="store_true",
+                    help="run every registered pass")
+    ap.add_argument("--root", type=pathlib.Path, default=REPO,
+                    help="repo root to lint (default: this checkout)")
+    args = ap.parse_args(argv)
+
+    names = list(PASSES) if (args.all or not args.passes) else args.passes
+    unknown = [n for n in names if n not in PASSES]
+    if unknown:
+        ap.error(f"unknown pass(es) {', '.join(unknown)}; "
+                 f"known: {', '.join(PASSES)}")
+    selected = {n: PASSES[n] for n in names}
+
+    ctx = load_context(args.root.resolve())
+    findings = run_passes(ctx, selected)
+    errors = [f for f in findings if f.severity == "error"]
+    for f in findings:
+        print(f.render())
+    scope = ", ".join(names)
+    if errors:
+        print(f"hippolint: {len(errors)} error finding(s) "
+              f"({len(findings) - len(errors)} info) across [{scope}]")
+        return 1
+    print(f"hippolint: clean across [{scope}] "
+          f"({len(findings)} info finding(s), {len(ctx.files)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

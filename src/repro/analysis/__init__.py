@@ -1,0 +1,30 @@
+"""hippolint — repo-wide static invariant checker.
+
+Five passes over the tree (``scripts/lint.py --all``):
+
+- ``locks``    — lock discipline on the threaded classes (guarded-by
+  declarations, worker-thread reachability, held-lock scoping)
+- ``crash``    — crash consistency (fsync-before-rename, WAL
+  append-before-admission, crash-site registry bijectivity)
+- ``jit``      — trace/recompile hazards inside jitted functions
+- ``deadcode`` — report-only audit of unreachable seed modules
+- ``markers``  — every pytest marker a test uses must be declared
+
+See ``docs/analysis.md`` and ``repro.analysis.base`` for the framework
+(findings, suppressions, comment annotations).
+"""
+from __future__ import annotations
+
+from repro.analysis import base, crash, deadcode, jit, locks, markers
+from repro.analysis.base import (Context, Finding, SourceFile,  # noqa: F401
+                                 load_context, run_passes)
+
+PASSES = {
+    "locks": locks.run,
+    "crash": crash.run,
+    "jit": jit.run,
+    "deadcode": deadcode.run,
+    "markers": markers.run,
+}
+
+assert tuple(PASSES) == base.PASS_NAMES

@@ -1,0 +1,213 @@
+"""hippolint core: findings, source loading, suppressions, pass registry.
+
+The analyzer is a set of *passes* over a shared parse of the tree. Each
+pass is a function ``run(ctx) -> list[Finding]``; ``scripts/lint.py``
+selects passes, runs them, filters suppressed findings, and reports the
+rest as ``path:line: [pass] message``.
+
+Suppression grammar (enforced here, not per pass)::
+
+    # hippolint: disable=<pass>[,<pass>] -- <justification>
+
+A disable comment applies to findings on its own line, or — when the
+comment stands alone on a line — to the next line that carries code. The
+justification is *mandatory*: a disable without ``-- <reason>`` is itself
+an error finding (``suppress`` pass), so every silenced invariant in the
+tree carries a written explanation next to it.
+
+Annotations read by individual passes use the same comment channel::
+
+    self._handles = {}        # guarded-by: _lock
+    def truncate_through(..): # thread: worker
+    def _close_locked(..):    # requires-lock: _lock
+
+See ``docs/analysis.md`` for the pass-by-pass semantics.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import pathlib
+import re
+import tokenize
+from dataclasses import dataclass, field
+
+# Passes register themselves here at import time (see __init__.py).
+PASS_NAMES = ("locks", "crash", "jit", "deadcode", "markers")
+
+_SUPPRESS_RE = re.compile(
+    r"hippolint:\s*disable=([A-Za-z_,\s]+?)(?:\s*--\s*(.*))?$")
+_GUARDED_RE = re.compile(r"guarded-by:\s*([A-Za-z_][A-Za-z0-9_]*)")
+_THREAD_RE = re.compile(r"thread:\s*worker\b")
+_REQUIRES_RE = re.compile(r"requires-lock:\s*([A-Za-z_][A-Za-z0-9_]*)")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One analyzer result, anchored to a source line.
+
+    ``severity`` is ``"error"`` (fails the lint) or ``"info"``
+    (report-only — the dead-seed audit)."""
+    path: str          # repo-relative, for display
+    line: int
+    check: str         # pass name
+    message: str
+    severity: str = "error"
+
+    def render(self) -> str:
+        tag = self.check if self.severity == "error" else f"{self.check}/info"
+        return f"{self.path}:{self.line}: [{tag}] {self.message}"
+
+    def sort_key(self):
+        return (self.path, self.line, self.check, self.message)
+
+
+@dataclass
+class Suppression:
+    passes: frozenset[str]
+    reason: str
+    decl_line: int     # where the comment sits
+    target_line: int   # the code line it silences
+
+
+@dataclass
+class SourceFile:
+    """One parsed module: AST plus the comment side-channel."""
+    path: pathlib.Path
+    rel: str
+    text: str
+    tree: ast.Module
+    comments: dict[int, str] = field(default_factory=dict)
+    code_lines: set[int] = field(default_factory=set)
+    suppressions: list[Suppression] = field(default_factory=list)
+
+    @classmethod
+    def load(cls, path: pathlib.Path, repo_root: pathlib.Path) -> "SourceFile":
+        text = path.read_text()
+        rel = str(path.relative_to(repo_root)) if path.is_relative_to(
+            repo_root) else str(path)
+        sf = cls(path=path, rel=rel, text=text, tree=ast.parse(text, str(path)))
+        _scan_tokens(sf)
+        _bind_suppressions(sf)
+        return sf
+
+    # -- comment annotations (used by the passes) ----------------------------
+
+    def comment_near(self, line: int) -> str:
+        """The comment on ``line``, or a standalone comment on the line
+        above (the two placements every annotation accepts)."""
+        out = self.comments.get(line, "")
+        above = line - 1
+        if above in self.comments and above not in self.code_lines:
+            out = self.comments[above] + " " + out
+        return out
+
+    def guarded_by(self, line: int) -> str | None:
+        m = _GUARDED_RE.search(self.comment_near(line))
+        return m.group(1) if m else None
+
+    def is_worker(self, line: int) -> bool:
+        return bool(_THREAD_RE.search(self.comment_near(line)))
+
+    def requires_lock(self, line: int) -> str | None:
+        m = _REQUIRES_RE.search(self.comment_near(line))
+        return m.group(1) if m else None
+
+    def suppressed(self, line: int, check: str) -> bool:
+        return any(s.target_line == line and check in s.passes
+                   for s in self.suppressions)
+
+
+def _scan_tokens(sf: SourceFile) -> None:
+    skip = {tokenize.COMMENT, tokenize.NL, tokenize.NEWLINE, tokenize.INDENT,
+            tokenize.DEDENT, tokenize.ENCODING, tokenize.ENDMARKER}
+    for tok in tokenize.generate_tokens(io.StringIO(sf.text).readline):
+        if tok.type == tokenize.COMMENT:
+            line = tok.start[0]
+            body = tok.string.lstrip("#").strip()
+            prev = sf.comments.get(line)
+            sf.comments[line] = body if prev is None else prev + " " + body
+        elif tok.type not in skip:
+            for ln in range(tok.start[0], tok.end[0] + 1):
+                sf.code_lines.add(ln)
+
+
+def _bind_suppressions(sf: SourceFile) -> None:
+    for line, comment in sorted(sf.comments.items()):
+        m = _SUPPRESS_RE.search(comment)
+        if not m:
+            continue
+        passes = frozenset(p.strip() for p in m.group(1).split(",")
+                           if p.strip())
+        reason = (m.group(2) or "").strip()
+        target = line
+        if line not in sf.code_lines:  # standalone comment: next code line
+            later = [ln for ln in sf.code_lines if ln > line]
+            target = min(later) if later else line
+        sf.suppressions.append(Suppression(passes=passes, reason=reason,
+                                           decl_line=line, target_line=target))
+
+
+@dataclass
+class Context:
+    """What every pass gets: the repo root and the parsed target files
+    (``src/**/*.py`` + ``scripts/*.py`` by default)."""
+    repo_root: pathlib.Path
+    files: list[SourceFile]
+
+    def file(self, rel: str) -> SourceFile | None:
+        for sf in self.files:
+            if sf.rel == rel:
+                return sf
+        return None
+
+
+def default_targets(repo_root: pathlib.Path) -> list[pathlib.Path]:
+    out = []
+    if (repo_root / "src").is_dir():
+        out += sorted((repo_root / "src").rglob("*.py"))
+    if (repo_root / "scripts").is_dir():
+        out += sorted((repo_root / "scripts").glob("*.py"))
+    return out
+
+
+def load_context(repo_root: pathlib.Path,
+                 paths: list[pathlib.Path] | None = None) -> Context:
+    paths = default_targets(repo_root) if paths is None else paths
+    files = [SourceFile.load(p, repo_root) for p in paths]
+    return Context(repo_root=repo_root, files=files)
+
+
+def suppression_findings(ctx: Context) -> list[Finding]:
+    """Malformed disables are themselves errors: a silence must name a
+    real pass and carry a justification."""
+    out = []
+    for sf in ctx.files:
+        for s in sf.suppressions:
+            unknown = s.passes - set(PASS_NAMES)
+            if unknown:
+                out.append(Finding(
+                    sf.rel, s.decl_line, "suppress",
+                    f"disable names unknown pass(es) "
+                    f"{', '.join(sorted(unknown))}; known: "
+                    f"{', '.join(PASS_NAMES)}"))
+            if not s.reason:
+                out.append(Finding(
+                    sf.rel, s.decl_line, "suppress",
+                    "suppression without a justification — write "
+                    "'# hippolint: disable=<pass> -- <why this is safe>'"))
+    return out
+
+
+def run_passes(ctx: Context, passes: dict[str, object]) -> list[Finding]:
+    """Run the selected passes, drop suppressed findings, and append
+    malformed-suppression errors. Returns findings sorted by location."""
+    findings = list(suppression_findings(ctx))
+    by_rel = {sf.rel: sf for sf in ctx.files}
+    for run in passes.values():
+        for f in run(ctx):
+            sf = by_rel.get(f.path)
+            if sf is not None and sf.suppressed(f.line, f.check):
+                continue
+            findings.append(f)
+    return sorted(findings, key=Finding.sort_key)

@@ -1,0 +1,198 @@
+"""Crash-consistency pass: fsync domination, WAL ordering, site registry.
+
+Three checks, each structural counterparts of the recovery contract the
+``persist``/``fault`` test tiers sample dynamically:
+
+1. **fsync-before-rename.** An ``os.replace``/``os.rename`` is the commit
+   instant of the atomic-publish idiom; renaming a payload that was never
+   fsynced publishes bytes the kernel may not have written. Every such
+   call must be preceded (same function) by an fsync-family call
+   (``os.fsync``, ``fsync_file``, ``fsync_dir``, ...).
+
+2. **WAL append-before-admission.** A function that journals
+   (``append_insert``/``append_delete``/``append_resummarize``) must not
+   mutate ``self`` state before the append: an op admitted before its
+   record exists is lost by a crash in between, which is precisely the
+   acknowledged-write-loss the WAL exists to prevent.
+
+3. **Crash-site bijectivity.** ``runtime/faultinject.py``'s ``SITES``
+   registry and the ``crashpoint("<site>")`` call sites in source must
+   match exactly: an unregistered call raises only at runtime (and only
+   if executed), a stale registry entry makes
+   ``tests/test_fault_recovery.py``'s every-site sweep vacuous for that
+   site, and a non-literal site argument defeats the audit entirely.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.base import Context, Finding, SourceFile
+
+CHECK = "crash"
+
+_APPENDS = {"append_insert", "append_delete", "append_resummarize"}
+_RENAMES = {"replace", "rename"}
+
+
+def _call_name(node: ast.Call) -> str:
+    fn = node.func
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    if isinstance(fn, ast.Name):
+        return fn.id
+    return ""
+
+
+def _is_os_rename(node: ast.Call) -> bool:
+    fn = node.func
+    return (isinstance(fn, ast.Attribute) and fn.attr in _RENAMES
+            and isinstance(fn.value, ast.Name) and fn.value.id == "os")
+
+
+def _self_store_root(target: ast.expr) -> str | None:
+    node = target
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        parent = node.value
+        if (isinstance(node, ast.Attribute)
+                and isinstance(parent, ast.Name) and parent.id == "self"):
+            return node.attr
+        node = parent
+    return None
+
+
+def _walk_shallow(fn):
+    """Walk a function body without descending into nested def/lambda —
+    those are analyzed as functions of their own."""
+    work = list(ast.iter_child_nodes(fn))
+    while work:
+        node = work.pop()
+        yield node
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+            work.extend(ast.iter_child_nodes(node))
+
+
+def _function_findings(sf: SourceFile, fn) -> list[Finding]:
+    out: list[Finding] = []
+    renames: list[ast.Call] = []
+    fsync_lines: list[int] = []
+    append_first: int | None = None
+    stores: list[tuple[str, int]] = []
+
+    for node in _walk_shallow(fn):
+        if isinstance(node, ast.Call):
+            name = _call_name(node)
+            if _is_os_rename(node):
+                renames.append(node)
+            if "fsync" in name or name == "commit_sentinel":
+                fsync_lines.append(node.lineno)
+            if name in _APPENDS:
+                if append_first is None or node.lineno < append_first:
+                    append_first = node.lineno
+        elif isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) else \
+                [node.target]
+            for t in targets:
+                root = _self_store_root(t)
+                if root is not None:
+                    stores.append((root, t.lineno))
+
+    for call in renames:
+        if not any(line < call.lineno for line in fsync_lines):
+            out.append(Finding(
+                sf.rel, call.lineno, CHECK,
+                f"os.{_call_name(call)} commit in {fn.name}() has no "
+                f"preceding fsync of the payload in the same function — "
+                f"a rename publishes bytes the kernel may not have written"))
+
+    if append_first is not None:
+        for attr, line in stores:
+            if line < append_first:
+                out.append(Finding(
+                    sf.rel, line, CHECK,
+                    f"self.{attr} is mutated at line {line} before the WAL "
+                    f"append at line {append_first} in {fn.name}() — "
+                    f"journal-before-admission is violated; a crash in "
+                    f"between loses an acknowledged operation"))
+    return out
+
+
+def _registered_sites(sf: SourceFile) -> dict[str, int]:
+    """Parse ``SITES = (...)`` or ``SITES = _register(...)``."""
+    out: dict[str, int] = {}
+    for node in ast.walk(sf.tree):
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id == "SITES"):
+            continue
+        elts: list[ast.expr] = []
+        if isinstance(node.value, ast.Tuple):
+            elts = node.value.elts
+        elif isinstance(node.value, ast.Call):
+            elts = list(node.value.args)
+        for e in elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                out.setdefault(e.value, e.lineno)
+    return out
+
+
+def _site_literals(node: ast.expr) -> list[str] | None:
+    """Constant site names an argument can evaluate to; None if opaque."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, ast.IfExp):
+        a, b = _site_literals(node.body), _site_literals(node.orelse)
+        if a is not None and b is not None:
+            return a + b
+    return None
+
+
+def _registry_findings(ctx: Context) -> list[Finding]:
+    reg_file = next((sf for sf in ctx.files
+                     if sf.rel.endswith("runtime/faultinject.py")), None)
+    if reg_file is None:
+        return []
+    registered = _registered_sites(reg_file)
+    out: list[Finding] = []
+
+    called: dict[str, int] = {}
+    for sf in ctx.files:
+        if sf is reg_file:
+            continue    # the registry module defines crashpoint, not sites
+        for node in ast.walk(sf.tree):
+            if not (isinstance(node, ast.Call)
+                    and _call_name(node) == "crashpoint" and node.args):
+                continue
+            sites = _site_literals(node.args[0])
+            if sites is None:
+                out.append(Finding(
+                    sf.rel, node.lineno, CHECK,
+                    "crashpoint() with a non-literal site argument — the "
+                    "registry bijectivity audit cannot see this site"))
+                continue
+            for site in sites:
+                called.setdefault(site, node.lineno)
+                if site not in registered:
+                    out.append(Finding(
+                        sf.rel, node.lineno, CHECK,
+                        f"crashpoint({site!r}) is not registered in "
+                        f"faultinject.SITES — it will raise ValueError at "
+                        f"runtime and the fault tier cannot arm it"))
+    for site, line in sorted(registered.items()):
+        if site not in called:
+            out.append(Finding(
+                reg_file.rel, line, CHECK,
+                f"registered crash site {site!r} has no crashpoint() call "
+                f"site in source — a stale entry makes the every-site "
+                f"recovery sweep vacuous for it"))
+    return out
+
+
+def run(ctx: Context) -> list[Finding]:
+    findings: list[Finding] = []
+    for sf in ctx.files:
+        for node in ast.walk(sf.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                findings.extend(_function_findings(sf, node))
+    findings.extend(_registry_findings(ctx))
+    return findings

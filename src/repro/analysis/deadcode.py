@@ -1,0 +1,134 @@
+"""Dead-seed audit (report-only): seed modules the product never imports.
+
+Builds the import graph of ``src/repro`` and walks reachability from the
+product surface: every module under ``repro.core`` / ``repro.runtime`` /
+``repro.checkpointing``, plus whatever ``benchmarks/``, ``scripts/``, and
+``examples/`` import. What is left unreached is seed-era code (the
+dormant transformer ``models/``, ``optim/``, ``launch/train.py``, ...)
+that future PRs should prune or revive *deliberately* — so this pass
+reports at ``info`` severity and never fails the lint. Modules whose only
+inbound edge is from ``tests/`` are annotated: deleting them means
+deleting their tests too.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+
+from repro.analysis.base import Context, Finding
+
+CHECK = "deadcode"
+
+_SEED_PACKAGES = ("repro.core", "repro.runtime", "repro.checkpointing",
+                  "repro.analysis")
+# examples/ are deliberately NOT roots: the seed-era demo scripts
+# (train_lm.py, serve_decode.py) pin the dormant transformer stack, and
+# the whole point of this audit is to see through that pin.
+_ENTRY_DIRS = ("benchmarks", "scripts")
+
+
+def _module_name(path: pathlib.Path, src_root: pathlib.Path) -> str:
+    rel = path.relative_to(src_root).with_suffix("")
+    parts = list(rel.parts)
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def _module_map(src_root: pathlib.Path) -> dict[str, pathlib.Path]:
+    return {_module_name(p, src_root): p
+            for p in sorted(src_root.rglob("*.py"))}
+
+
+def _imports(tree: ast.AST, current: str,
+             modules: set[str]) -> set[str]:
+    """repro.* modules a parsed file imports (absolute + relative)."""
+    out: set[str] = set()
+
+    def add(name: str) -> None:
+        # `from repro.core import index` names either a module or a
+        # symbol; resolve to the longest prefix that is a real module
+        while name and name not in modules:
+            name = name.rpartition(".")[0]
+        if name:
+            out.add(name)
+
+    pkg_parts = current.split(".")
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name.split(".")[0] == "repro":
+                    add(alias.name)
+        elif isinstance(node, ast.ImportFrom):
+            if node.level == 0:
+                base = node.module or ""
+                if base.split(".")[0] != "repro":
+                    continue
+            else:
+                # relative: resolve against the importing module's package
+                base_parts = pkg_parts[:max(0, len(pkg_parts) - node.level)]
+                base = ".".join(base_parts + ([node.module]
+                                              if node.module else []))
+            add(base)
+            for alias in node.names:
+                add(f"{base}.{alias.name}")
+    return out
+
+
+def _external_imports(dirpath: pathlib.Path,
+                      modules: set[str]) -> set[str]:
+    out: set[str] = set()
+    if not dirpath.is_dir():
+        return out
+    for path in sorted(dirpath.rglob("*.py")):
+        try:
+            tree = ast.parse(path.read_text())
+        except SyntaxError:
+            continue
+        out |= _imports(tree, "", modules)
+    return out
+
+
+def run(ctx: Context) -> list[Finding]:
+    src_root = ctx.repo_root / "src"
+    if not src_root.is_dir():
+        return []
+    mod_map = _module_map(src_root)
+    modules = set(mod_map)
+    deps = {name: _imports(ast.parse(path.read_text()), name, modules)
+            for name, path in mod_map.items()}
+
+    seeds = {m for m in modules
+             if any(m == p or m.startswith(p + ".") for p in _SEED_PACKAGES)}
+    for d in _ENTRY_DIRS:
+        seeds |= _external_imports(ctx.repo_root / d, modules)
+    test_pins = _external_imports(ctx.repo_root / "tests", modules)
+    example_pins = _external_imports(ctx.repo_root / "examples", modules)
+
+    reachable: set[str] = set()
+    work = sorted(seeds)
+    while work:
+        m = work.pop()
+        if m in reachable or m not in modules:
+            continue
+        reachable.add(m)
+        # importing a.b.c imports a and a.b
+        parent = m.rpartition(".")[0]
+        if parent:
+            work.append(parent)
+        work.extend(sorted(deps.get(m, ())))
+
+    findings = []
+    for name in sorted(modules - reachable):
+        pins = [p for p, pinned in (("tests/", test_pins),
+                                    ("examples/", example_pins))
+                if name in pinned]
+        note = f" (pinned only by {' and '.join(pins)} — those go with it)" \
+            if pins else ""
+        findings.append(Finding(
+            str(mod_map[name].relative_to(ctx.repo_root)), 1, CHECK,
+            f"seed module {name} is unreachable from "
+            f"core/runtime/checkpointing or any benchmark/script "
+            f"entrypoint{note} — prune or revive deliberately",
+            severity="info"))
+    return findings

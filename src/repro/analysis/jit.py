@@ -1,0 +1,230 @@
+"""Jit-stability pass: trace/recompile hazards inside jitted functions.
+
+A function is *jitted* when it is decorated ``@jax.jit`` /
+``@partial(jax.jit, ...)`` / ``@jax.jit(...)``, or wrapped at module
+scope (``f = jax.jit(g)``). Parameters named in ``static_argnames`` are
+concrete at trace time; every other parameter is a tracer.
+
+Flagged inside jitted bodies:
+
+- ``jnp.nonzero``/``jnp.unique`` without ``size=`` — data-dependent
+  output shape, a guaranteed trace error or silent recompile trap.
+- ``int()``/``bool()`` coercion or ``.item()`` on an expression that
+  references a traced parameter — forces a concrete value out of a
+  tracer (``ConcretizationTypeError`` at best).
+- ``if``/``while`` tests and ``range()`` iteration over traced
+  parameters — Python control flow burns the traced value into the
+  trace. ``.shape``/``.ndim``/``.dtype``/``.size`` projections and
+  ``len()`` are static under trace and exempt.
+
+Flagged anywhere: a ``jax.jit(...)``/``partial(jax.jit, ...)`` call
+lexically inside a ``for``/``while`` body — a fresh jit wrapper per
+iteration retraces every call (cache keyed on wrapper identity).
+
+The pass is name-local by design: values *derived* from traced
+parameters are not tracked through assignments. That keeps false
+positives near zero on numeric kernel code at the cost of missing
+second-order flows — the documented trade (docs/analysis.md).
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.base import Context, Finding, SourceFile
+
+CHECK = "jit"
+
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+
+
+def _is_jax_jit(node: ast.expr) -> bool:
+    if isinstance(node, ast.Name):
+        return node.id == "jit"
+    if isinstance(node, ast.Attribute):
+        return node.attr == "jit"
+    return False
+
+
+def _static_argnames(call: ast.Call) -> set[str]:
+    out: set[str] = set()
+    for kw in call.keywords:
+        if kw.arg not in ("static_argnames", "static_argnums"):
+            continue
+        v = kw.value
+        elts = v.elts if isinstance(v, (ast.Tuple, ast.List)) else [v]
+        for e in elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                out.add(e.value)
+    return out
+
+
+def _jit_decoration(fn) -> tuple[bool, set[str]]:
+    """(is jitted, static argnames) from a def's decorator list."""
+    for dec in fn.decorator_list:
+        if _is_jax_jit(dec):
+            return True, set()
+        if isinstance(dec, ast.Call):
+            if _is_jax_jit(dec.func):
+                return True, _static_argnames(dec)
+            # partial(jax.jit, static_argnames=...)
+            fname = dec.func.attr if isinstance(dec.func, ast.Attribute) \
+                else (dec.func.id if isinstance(dec.func, ast.Name) else "")
+            if fname == "partial" and dec.args and _is_jax_jit(dec.args[0]):
+                return True, _static_argnames(dec)
+    return False, set()
+
+
+def _wrapped_defs(tree: ast.AST) -> dict[str, set[str]]:
+    """``f = jax.jit(g, ...)`` at any scope → {g: static argnames}."""
+    out: dict[str, set[str]] = {}
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Assign) and isinstance(node.value,
+                                                            ast.Call)):
+            continue
+        call = node.value
+        if _is_jax_jit(call.func) and call.args \
+                and isinstance(call.args[0], ast.Name):
+            out[call.args[0].id] = _static_argnames(call)
+    return out
+
+
+class _Names(ast.NodeVisitor):
+    """Free names in an expression, skipping statically-safe projections
+    (``x.shape...``, ``len(x)``) whose concreteness survives tracing."""
+
+    def __init__(self):
+        self.names: set[str] = set()
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        if node.attr in _STATIC_ATTRS:
+            return
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        if isinstance(node.func, ast.Name) and node.func.id == "len":
+            return
+        self.generic_visit(node)
+
+    def visit_Name(self, node: ast.Name) -> None:
+        self.names.add(node.id)
+
+
+def _traced_refs(expr: ast.expr, traced: set[str]) -> set[str]:
+    v = _Names()
+    v.visit(expr)
+    return v.names & traced
+
+
+def _body_findings(sf: SourceFile, fn, traced: set[str]) -> list[Finding]:
+    out: list[Finding] = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            f = node.func
+            if (isinstance(f, ast.Attribute)
+                    and f.attr in ("nonzero", "unique")
+                    and isinstance(f.value, ast.Name)
+                    and f.value.id == "jnp"
+                    and not any(kw.arg == "size" for kw in node.keywords)):
+                out.append(Finding(
+                    sf.rel, node.lineno, CHECK,
+                    f"jnp.{f.attr}() without size= inside jitted "
+                    f"{fn.name}() — data-dependent output shape cannot "
+                    f"trace"))
+            if (isinstance(f, ast.Name) and f.id in ("int", "bool")
+                    and node.args):
+                hits = _traced_refs(node.args[0], traced)
+                if hits:
+                    out.append(Finding(
+                        sf.rel, node.lineno, CHECK,
+                        f"{f.id}() coerces traced value(s) "
+                        f"{', '.join(sorted(hits))} inside jitted "
+                        f"{fn.name}() — concretization error under trace"))
+            if isinstance(f, ast.Attribute) and f.attr == "item":
+                hits = _traced_refs(f.value, traced)
+                if hits:
+                    out.append(Finding(
+                        sf.rel, node.lineno, CHECK,
+                        f".item() on traced value(s) "
+                        f"{', '.join(sorted(hits))} inside jitted "
+                        f"{fn.name}()"))
+        elif isinstance(node, (ast.If, ast.While)):
+            hits = _traced_refs(node.test, traced)
+            if hits:
+                kw = "if" if isinstance(node, ast.If) else "while"
+                out.append(Finding(
+                    sf.rel, node.lineno, CHECK,
+                    f"Python {kw} over traced value(s) "
+                    f"{', '.join(sorted(hits))} inside jitted {fn.name}() "
+                    f"— use jnp.where/lax.cond or mark the arg static"))
+        elif isinstance(node, ast.For):
+            it = node.iter
+            if (isinstance(it, ast.Call) and isinstance(it.func, ast.Name)
+                    and it.func.id == "range"):
+                hits = set()
+                for a in it.args:
+                    hits |= _traced_refs(a, traced)
+                if hits:
+                    out.append(Finding(
+                        sf.rel, node.lineno, CHECK,
+                        f"range() over traced value(s) "
+                        f"{', '.join(sorted(hits))} inside jitted "
+                        f"{fn.name}() — loop extent burns into the trace"))
+    return out
+
+
+class _JitInLoop(ast.NodeVisitor):
+    """``jax.jit(...)`` constructed lexically inside a loop body."""
+
+    def __init__(self, sf: SourceFile):
+        self.sf = sf
+        self.depth = 0
+        self.findings: list[Finding] = []
+
+    def _loop(self, node) -> None:
+        self.depth += 1
+        self.generic_visit(node)
+        self.depth -= 1
+
+    def visit_For(self, node):
+        self._loop(node)
+
+    def visit_While(self, node):
+        self._loop(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        if self.depth > 0:
+            is_jit_ctor = _is_jax_jit(node.func)
+            if not is_jit_ctor and isinstance(node.func, (ast.Name,
+                                                          ast.Attribute)):
+                fname = node.func.id if isinstance(node.func, ast.Name) \
+                    else node.func.attr
+                is_jit_ctor = fname == "partial" and node.args \
+                    and _is_jax_jit(node.args[0])
+            if is_jit_ctor:
+                self.findings.append(Finding(
+                    self.sf.rel, node.lineno, CHECK,
+                    "jit wrapper constructed inside a loop — a fresh "
+                    "wrapper per iteration retraces on every call; hoist "
+                    "the jax.jit() out of the loop"))
+        self.generic_visit(node)
+
+
+def run(ctx: Context) -> list[Finding]:
+    findings: list[Finding] = []
+    for sf in ctx.files:
+        wrapped = _wrapped_defs(sf.tree)
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            jitted, static = _jit_decoration(node)
+            if not jitted and node.name in wrapped:
+                jitted, static = True, wrapped[node.name]
+            if not jitted:
+                continue
+            params = {a.arg for a in (node.args.posonlyargs + node.args.args
+                                      + node.args.kwonlyargs)}
+            findings.extend(_body_findings(sf, node, params - static))
+        loop_scan = _JitInLoop(sf)
+        loop_scan.visit(sf.tree)
+        findings.extend(loop_scan.findings)
+    return findings

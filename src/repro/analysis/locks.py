@@ -1,0 +1,333 @@
+"""Lock-discipline pass: guarded attributes, worker threads, held locks.
+
+Model, per class:
+
+- **Worker entries** — methods a second thread runs: inferred from
+  ``threading.Thread(target=self.m)`` anywhere in the class, or declared
+  with ``# thread: worker`` on the ``def`` (commit callbacks and other
+  cross-object entrypoints the AST cannot see).
+- **W** = intra-class call-graph closure from the worker entries; **C** =
+  closure from every other method (the caller-thread surface). A method
+  can be in both.
+- **Contended attribute** — accessed in W *and* in C, and mutated outside
+  ``__init__`` (rebound, or stored through: ``self.stats.x += 1`` counts).
+  Attributes only ever *called into* (``self._q.put(...)``) are exempt —
+  that is the queue/Lock idiom, where the object carries its own
+  synchronization. Every contended attribute must carry a
+  ``# guarded-by: <lock>`` declaration on its ``__init__`` assignment.
+- **Guarded access** — any non-``__init__`` access to a declared
+  attribute must sit under ``with self.<lock>:`` or inside a method
+  declared ``# requires-lock: <lock>`` (whose own call sites must then
+  hold the lock — checked too).
+
+Classes with no worker entries have one thread by construction and are
+skipped entirely; attributes assigned ``threading.Lock()``/``RLock()``
+are the locks themselves and exempt.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+
+from repro.analysis.base import Context, Finding, SourceFile
+
+CHECK = "locks"
+
+
+@dataclass
+class _Access:
+    attr: str
+    line: int
+    store: bool           # rebound or stored-through (mutation)
+    held: frozenset[str]  # locks held via enclosing `with self.<lock>:`
+    in_init: bool
+
+
+@dataclass
+class _Call:
+    method: str
+    line: int
+    held: frozenset[str]
+
+
+@dataclass
+class _Method:
+    name: str
+    line: int
+    worker: bool
+    requires: str | None
+    accesses: list[_Access] = field(default_factory=list)
+    calls: list[_Call] = field(default_factory=list)
+
+
+def _self_attr_chain(node: ast.expr) -> str | None:
+    """For ``self.X[...].Y`` style expressions, the root attribute ``X``
+    when the expression is rooted at ``self``; else None."""
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        parent = node.value
+        if (isinstance(node, ast.Attribute)
+                and isinstance(parent, ast.Name) and parent.id == "self"):
+            return node.attr
+        node = parent
+    return None
+
+
+def _is_lock_ctor(node: ast.expr) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    fn = node.func
+    name = fn.attr if isinstance(fn, ast.Attribute) else (
+        fn.id if isinstance(fn, ast.Name) else "")
+    return name in ("Lock", "RLock", "Condition")
+
+
+class _MethodScanner(ast.NodeVisitor):
+    """Collect self-attribute accesses and self-method calls in one method
+    body, tracking the set of ``with self.<lock>:`` scopes in force.
+
+    Nested ``def``/``lambda`` bodies are scanned with an *empty* held set:
+    a closure created under a lock does not run under it."""
+
+    def __init__(self, method: _Method, in_init: bool):
+        self.m = method
+        self.in_init = in_init
+        self.held: tuple[str, ...] = ()
+
+    def _add(self, attr: str, line: int, store: bool) -> None:
+        self.m.accesses.append(_Access(
+            attr=attr, line=line, store=store,
+            held=frozenset(self.held), in_init=self.in_init))
+
+    # -- scope tracking ------------------------------------------------------
+
+    def visit_With(self, node: ast.With) -> None:
+        added = []
+        for item in node.items:
+            attr = _self_attr_chain(item.context_expr)
+            if attr is not None:
+                self._add(attr, item.context_expr.lineno, store=False)
+                added.append(attr)
+            else:
+                self.visit(item.context_expr)
+            if item.optional_vars is not None:
+                self.visit(item.optional_vars)
+        self.held = self.held + tuple(added)
+        for stmt in node.body:
+            self.visit(stmt)
+        self.held = self.held[:len(self.held) - len(added)]
+
+    def _visit_nested(self, node) -> None:
+        saved, self.held = self.held, ()
+        for stmt in node.body if isinstance(node.body, list) else [node.body]:
+            self.visit(stmt)
+        self.held = saved
+
+    def visit_FunctionDef(self, node):
+        self._visit_nested(node)
+
+    def visit_AsyncFunctionDef(self, node):
+        self._visit_nested(node)
+
+    def visit_Lambda(self, node):
+        self._visit_nested(node)
+
+    # -- accesses ------------------------------------------------------------
+
+    def _record_target(self, target: ast.expr) -> bool:
+        attr = _self_attr_chain(target)
+        if attr is not None:
+            self._add(attr, target.lineno, store=True)
+            # the inner chain (`self.stats` in `self.stats.x = 1`) is also
+            # a read; fall through to generic_visit for it
+            if isinstance(target, (ast.Attribute, ast.Subscript)):
+                self.visit(target.value)
+                if isinstance(target, ast.Subscript):
+                    self.visit(target.slice)
+            return True
+        return False
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for t in node.targets:
+            if not self._record_target(t):
+                self.visit(t)
+        self.visit(node.value)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        if not self._record_target(node.target):
+            self.visit(node.target)
+        self.visit(node.value)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        if not self._record_target(node.target):
+            self.visit(node.target)
+        if node.value is not None:
+            self.visit(node.value)
+
+    def visit_Delete(self, node: ast.Delete) -> None:
+        for t in node.targets:
+            if not self._record_target(t):
+                self.visit(t)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        fn = node.func
+        if (isinstance(fn, ast.Attribute) and isinstance(fn.value, ast.Name)
+                and fn.value.id == "self"):
+            # self.m(...): an intra-class call, not an attribute access —
+            # resolved against the method table by the checker
+            self.m.calls.append(_Call(method=fn.attr, line=node.lineno,
+                                      held=frozenset(self.held)))
+        else:
+            self.visit(fn)
+        for a in node.args:
+            self.visit(a)
+        for kw in node.keywords:
+            self.visit(kw.value)
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        if isinstance(node.value, ast.Name) and node.value.id == "self":
+            self._add(node.attr, node.lineno, store=False)
+        else:
+            self.visit(node.value)
+
+
+def _thread_targets(tree: ast.AST) -> dict[str, int]:
+    """``threading.Thread(target=self.m)`` → {m: line} within a class."""
+    out: dict[str, int] = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        name = fn.attr if isinstance(fn, ast.Attribute) else (
+            fn.id if isinstance(fn, ast.Name) else "")
+        if name != "Thread":
+            continue
+        for kw in node.keywords:
+            if kw.arg == "target":
+                attr = _self_attr_chain(kw.value)
+                if attr is not None:
+                    out.setdefault(attr, node.lineno)
+    return out
+
+
+def _closure(methods: dict[str, _Method], seeds: set[str]) -> set[str]:
+    reach, work = set(), [s for s in seeds if s in methods]
+    while work:
+        name = work.pop()
+        if name in reach:
+            continue
+        reach.add(name)
+        for call in methods[name].calls:
+            if call.method in methods and call.method not in reach:
+                work.append(call.method)
+    return reach
+
+
+def _scan_class(sf: SourceFile, cls: ast.ClassDef) -> list[Finding]:
+    methods: dict[str, _Method] = {}
+    lock_attrs: set[str] = set()
+    guarded: dict[str, str] = {}   # attr -> lock name
+    decl_lines: dict[str, int] = {}
+
+    for node in cls.body:
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        m = _Method(name=node.name, line=node.lineno,
+                    worker=sf.is_worker(node.lineno),
+                    requires=sf.requires_lock(node.lineno))
+        scanner = _MethodScanner(m, in_init=(node.name == "__init__"))
+        for stmt in node.body:
+            scanner.visit(stmt)
+        methods[node.name] = m
+        # lock attributes + guarded-by declarations live on assignments
+        # (plain or annotated)
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Assign) and len(sub.targets) == 1:
+                target, value = sub.targets[0], sub.value
+            elif isinstance(sub, ast.AnnAssign) and sub.value is not None:
+                target, value = sub.target, sub.value
+            else:
+                continue
+            attr = _self_attr_chain(target)
+            if attr is None or not isinstance(target, ast.Attribute):
+                continue
+            if _is_lock_ctor(value):
+                lock_attrs.add(attr)
+            lock = sf.guarded_by(sub.lineno)
+            if lock is not None:
+                guarded[attr] = lock
+                decl_lines[attr] = sub.lineno
+
+    inferred = _thread_targets(cls)
+    worker_entries = {n for n, m in methods.items() if m.worker}
+    worker_entries |= {n for n in inferred if n in methods}
+    if not worker_entries:
+        return []   # single-threaded class: nothing to check
+
+    W = _closure(methods, worker_entries)
+    C = _closure(methods, set(methods) - worker_entries - {"__init__"})
+
+    findings: list[Finding] = []
+
+    def held_ok(access: _Access, m: _Method, lock: str) -> bool:
+        return lock in access.held or m.requires == lock
+
+    # 1. guarded accesses must hold the declared lock
+    for m in methods.values():
+        for a in m.accesses:
+            if a.in_init or a.attr not in guarded:
+                continue
+            lock = guarded[a.attr]
+            if not held_ok(a, m, lock):
+                kind = "write to" if a.store else "read of"
+                findings.append(Finding(
+                    sf.rel, a.line, CHECK,
+                    f"{kind} {cls.name}.{a.attr} (guarded-by {lock}) "
+                    f"outside 'with self.{lock}' in {m.name}()"))
+
+    # 2. requires-lock methods may only be called with the lock held
+    for m in methods.values():
+        for call in m.calls:
+            callee = methods.get(call.method)
+            if callee is None or callee.requires is None:
+                continue
+            lock = callee.requires
+            if lock not in call.held and m.requires != lock \
+                    and m.name != "__init__":
+                findings.append(Finding(
+                    sf.rel, call.line, CHECK,
+                    f"call to {cls.name}.{call.method}() (requires-lock "
+                    f"{lock}) without holding self.{lock} in {m.name}()"))
+
+    # 3. contended attributes must be declared guarded
+    side: dict[str, dict[str, int]] = {}   # attr -> {"W": line, "C": line}
+    mutated: set[str] = set()
+    for name, m in methods.items():
+        for a in m.accesses:
+            if a.in_init or a.attr in lock_attrs:
+                continue
+            if a.store:
+                mutated.add(a.attr)
+            entry = side.setdefault(a.attr, {})
+            if name in W:
+                entry.setdefault("W", a.line)
+            if name in C:
+                entry.setdefault("C", a.line)
+    for attr in sorted(side):
+        entry = side[attr]
+        if "W" in entry and "C" in entry and attr in mutated \
+                and attr not in guarded:
+            findings.append(Finding(
+                sf.rel, entry["W"], CHECK,
+                f"{cls.name}.{attr} is reachable from a worker thread and "
+                f"the caller thread and is mutated outside __init__, but "
+                f"carries no '# guarded-by: <lock>' declaration"))
+    return findings
+
+
+def run(ctx: Context) -> list[Finding]:
+    findings: list[Finding] = []
+    for sf in ctx.files:
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.ClassDef):
+                findings.extend(_scan_class(sf, node))
+    return findings

@@ -1,0 +1,116 @@
+"""Markers pass: every pytest marker a test uses must be declared.
+
+The tiered suite routes on markers (slow / shard / writer / ... ,
+registered in ``tests/conftest.py``), and pytest only *warns* on an
+unknown marker — so a typo'd or undeclared marker silently drops a
+module out of every ``-m`` tier and the mistake rots. This pass walks
+every ``tests/*.py`` module's AST for ``pytest.mark.<name>`` uses
+(decorators, ``pytestmark`` assignments, ``pytest.param`` marks alike)
+and compares them against the markers declared via
+``config.addinivalue_line("markers", ...)``, plus pytest's built-ins.
+
+This began life as ``scripts/check_markers.py``; that script is now a
+thin re-exporting wrapper, and ``declared_markers`` / ``used_markers`` /
+``find_offenders`` / ``main`` keep their original signatures for it and
+for ``tests/test_markers.py``.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+
+from repro.analysis.base import Context, Finding
+
+CHECK = "markers"
+
+# Markers pytest itself defines; always allowed.
+BUILTIN_MARKERS = {
+    "parametrize", "skip", "skipif", "xfail", "usefixtures",
+    "filterwarnings", "tryfirst", "trylast",
+}
+
+
+def declared_markers(conftest_path: pathlib.Path) -> set[str]:
+    """Markers registered via ``config.addinivalue_line("markers", "<name>:
+    <description>")`` in a conftest, extracted from its AST."""
+    tree = ast.parse(conftest_path.read_text())
+    out: set[str] = set()
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "addinivalue_line"
+                and len(node.args) == 2
+                and isinstance(node.args[0], ast.Constant)
+                and node.args[0].value == "markers"
+                and isinstance(node.args[1], ast.Constant)):
+            decl = str(node.args[1].value)
+            out.add(decl.split(":", 1)[0].strip().split("(", 1)[0].strip())
+    return out
+
+
+def used_marker_lines(test_path: pathlib.Path) -> dict[str, int]:
+    """Every ``pytest.mark.<name>`` chain in a module's AST, with the
+    first line it appears on."""
+    tree = ast.parse(test_path.read_text())
+    out: dict[str, int] = {}
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Attribute)
+                and node.value.attr == "mark"
+                and isinstance(node.value.value, ast.Name)
+                and node.value.value.id == "pytest"):
+            prev = out.get(node.attr)
+            out[node.attr] = node.lineno if prev is None \
+                else min(prev, node.lineno)
+    return out
+
+
+def used_markers(test_path: pathlib.Path) -> set[str]:
+    """Every ``pytest.mark.<name>`` attribute chain in a module's AST."""
+    return set(used_marker_lines(test_path))
+
+
+def find_offenders(tests_dir: pathlib.Path) -> list[tuple[str, str]]:
+    """(file, marker) pairs for every undeclared, non-builtin marker use."""
+    allowed = BUILTIN_MARKERS | declared_markers(tests_dir / "conftest.py")
+    offenders = []
+    for path in sorted(tests_dir.glob("*.py")):
+        for marker in sorted(used_markers(path) - allowed):
+            offenders.append((path.name, marker))
+    return offenders
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = sys.argv[1:] if argv is None else argv
+    tests_dir = pathlib.Path(args[0]) if args else _default_tests_dir()
+    offenders = find_offenders(tests_dir)
+    for name, marker in offenders:
+        print(f"{name}: marker {marker!r} is not declared in conftest.py "
+              f"(register it in pytest_configure or fix the typo)")
+    if offenders:
+        return 1
+    print(f"ok: every marker under {tests_dir} is declared")
+    return 0
+
+
+def _default_tests_dir() -> pathlib.Path:
+    # src/repro/analysis/markers.py -> repo root -> tests/
+    return pathlib.Path(__file__).resolve().parents[3] / "tests"
+
+
+def run(ctx: Context) -> list[Finding]:
+    tests_dir = ctx.repo_root / "tests"
+    if not (tests_dir / "conftest.py").exists():
+        return []
+    allowed = BUILTIN_MARKERS | declared_markers(tests_dir / "conftest.py")
+    findings = []
+    for path in sorted(tests_dir.glob("*.py")):
+        lines = used_marker_lines(path)
+        for marker in sorted(set(lines) - allowed):
+            findings.append(Finding(
+                str(path.relative_to(ctx.repo_root)), lines[marker], CHECK,
+                f"marker {marker!r} is not declared in tests/conftest.py — "
+                f"pytest only warns, so the module silently drops out of "
+                f"every -m tier"))
+    return findings

@@ -425,6 +425,10 @@ def _prune(root: Path, keep: int) -> None:
     for d in doomed:
         tomb = d.with_name(d.name + _TOMB)
         try:
+            # hippolint: disable=crash -- this rename deletes, not commits:
+            # the payload is a doomed-but-committed snapshot, so durability
+            # is not required — a crash that loses the rename merely
+            # resurrects a committed directory the next save re-sweeps
             os.replace(d, tomb)
         except OSError:
             tomb = d     # rename refused: fall back to direct removal

@@ -118,10 +118,10 @@ class Journal:
         self.dir.mkdir(parents=True, exist_ok=True)
         self.num_shards = num_shards
         self.sync = sync
-        self._handles: dict[str, object] = {}
         # appends (engine foreground) and truncations (persister commit
         # callback) may run on different threads; file state is guarded
         self._lock = threading.Lock()
+        self._handles: dict[str, object] = {}  # guarded-by: _lock
         # resume seqno allocation after the highest surviving record, so
         # post-recovery appends always order after everything on disk
         records = self.replay()
@@ -133,7 +133,7 @@ class Journal:
         return [f"shard_{s}.log" for s in range(self.num_shards)] + \
             ["global.log"]
 
-    def _handle(self, name: str):
+    def _handle(self, name: str):  # requires-lock: _lock
         h = self._handles.get(name)
         if h is None or h.closed:
             h = open(self.dir / name, "ab")
@@ -157,7 +157,7 @@ class Journal:
         with self._lock:
             self._close_locked()
 
-    def _close_locked(self) -> None:
+    def _close_locked(self) -> None:  # requires-lock: _lock
         for h in self._handles.values():
             if not h.closed:
                 h.close()
@@ -229,7 +229,7 @@ class Journal:
             finally:
                 os.close(fsync_dir_fd)
 
-    def truncate_through(self, seqno: int) -> None:
+    def truncate_through(self, seqno: int) -> None:  # thread: worker
         """Drop every record with ``seqno <=`` the given watermark, keeping
         the rest — the commit callback of an asynchronous snapshot, which
         may run after the foreground appended records the snapshot does not

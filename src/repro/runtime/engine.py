@@ -101,6 +101,7 @@ before and since).
 """
 from __future__ import annotations
 
+import threading
 from collections import deque
 from dataclasses import dataclass, field
 
@@ -403,7 +404,12 @@ class QueryEngine:
         self._delta_seq = 0            # committed deltas against it
         self._full_bytes = 0           # base snapshot payload size
         self._delta_bytes = 0          # cumulative chain payload size
-        self._durable_watermark = 0    # highest seqno covered by a commit
+        # the persister's commit callback (_commit_job, worker thread)
+        # advances the durable watermark while the foreground reads it for
+        # persist_lag; both sides go through this lock
+        self._durable_lock = threading.Lock()
+        self._durable_watermark = 0    # guarded-by: _durable_lock
+        #                                (highest seqno covered by a commit)
         if self.storage_dir is not None:
             if self.writer is None:
                 raise ValueError(
@@ -638,15 +644,24 @@ class QueryEngine:
             # let acknowledged state ride on the WAL alone indefinitely
             self.save()
 
-    def _commit_job(self, job: dict) -> None:
+    def _commit_job(self, job: dict) -> None:  # thread: worker
         """The persister worker's half: durable file I/O, then — and only
         then — WAL truncation through the job's watermark. Truncating here
         (the commit callback) rather than at submit is what keeps a slow
         background save from widening the crash window: records appended
-        while the job was in flight survive to the next commit."""
+        while the job was in flight survive to the next commit.
+
+        Runs on the ``BackgroundPersister`` thread. It reads only
+        attributes fixed before ``_start_persister()`` spawned the worker
+        (``storage_dir``/``journal``/``snapshot_keep``) plus the job dict,
+        and publishes exactly one thing back: the durable watermark, under
+        ``_durable_lock``."""
         from repro.checkpointing.snapshot import (write_delta_snapshot,
                                                   write_full_snapshot)
         if job["kind"] == "full":
+            # hippolint: disable=locks -- storage_dir is rebound only by
+            # _adopt_storage, which runs before _start_persister spawns
+            # this worker; it is immutable for the persister's lifetime
             write_full_snapshot(self.storage_dir, job["sections"],
                                 keep=self.snapshot_keep,
                                 epoch=job["epoch"], compact=job["compact"])
@@ -655,8 +670,12 @@ class QueryEngine:
                                  job["base_epoch"], job["seq"])
         from repro.runtime.faultinject import crashpoint
         crashpoint("truncate.pre")
+        # hippolint: disable=locks -- journal is rebound only by
+        # _adopt_storage before _start_persister spawns this worker; the
+        # Journal object itself is internally locked (wal.py)
         self.journal.truncate_through(job["watermark"])
-        self._durable_watermark = job["watermark"]
+        with self._durable_lock:
+            self._durable_watermark = job["watermark"]
 
     def _truncate_journal(self, wm: int) -> None:
         """Post-commit journal GC: a quiet journal (nothing appended past
@@ -668,7 +687,8 @@ class QueryEngine:
             self.journal.reset()
         else:
             self.journal.truncate_through(wm)
-        self._durable_watermark = wm
+        with self._durable_lock:
+            self._durable_watermark = wm
 
     def _note_full(self, path, epoch: int) -> None:
         self._base_epoch = epoch
@@ -784,15 +804,17 @@ class QueryEngine:
                 for k in range(1, self._delta_seq + 1))
         # until the next commit records a watermark, persist_lag honestly
         # reports the whole surviving journal as not-yet-snapshotted
-        self._durable_watermark = 0
+        with self._durable_lock:
+            self._durable_watermark = 0
         self._start_persister()
 
     def _sync_writer_stats(self) -> None:
         w = self.writer
         st = self.stats
         if self.journal is not None:
-            st.persist_lag = max(0, self.journal.last_seqno
-                                 - self._durable_watermark)
+            with self._durable_lock:
+                wm = self._durable_watermark
+            st.persist_lag = max(0, self.journal.last_seqno - wm)
         if self._persister is not None:
             st.persist_pending = self._persister.pending
         st.drains = w.stats.drains

@@ -41,7 +41,20 @@ from __future__ import annotations
 
 import threading
 
-SITES = (
+def _register(*sites: str) -> tuple[str, ...]:
+    """Build the registry, refusing duplicates at import time: a
+    copy-pasted site name would silently shadow its twin — ``arm`` would
+    arm both call sites at once — blinding the fault tier and the
+    hippolint bijectivity audit alike."""
+    seen: set[str] = set()
+    for site in sites:
+        if site in seen:
+            raise ValueError(f"duplicate crash site {site!r} in SITES")
+        seen.add(site)
+    return sites
+
+
+SITES = _register(
     "wal.pre_append",
     "drain.pre_swap",
     "delta.pre_commit",

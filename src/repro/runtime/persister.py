@@ -41,7 +41,7 @@ from __future__ import annotations
 import queue
 import threading
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 
 from repro.runtime.faultinject import crashpoint
 
@@ -75,10 +75,14 @@ class BackgroundPersister:
             raise ValueError(f"max_queue must be >= 1, got {max_queue}")
         self._commit = commit_fn
         self._q: queue.Queue = queue.Queue(maxsize=max_queue)
-        self._poison: BaseException | None = None
+        # guards the worker/caller shared state below; held only around
+        # state flips and counter bumps, never across commit I/O, so a
+        # slow disk cannot block a stats read
+        self._lock = threading.Lock()
+        self._poison: BaseException | None = None  # guarded-by: _lock
         self._closed = False
-        self._inflight = False
-        self.stats = PersistStats()
+        self._inflight = False                     # guarded-by: _lock
+        self.stats = PersistStats()                # guarded-by: _lock
         self._thread = threading.Thread(target=self._run, name=name,
                                         daemon=True)
         self._thread.start()
@@ -91,24 +95,29 @@ class BackgroundPersister:
             if job is _STOP:
                 self._q.task_done()
                 return
-            self._inflight = True
+            with self._lock:
+                poison = self._poison
+                self._inflight = True
             try:
-                if self._poison is not None:
+                if poison is not None:
                     # fail queued jobs *without* committing: committing past
                     # a failed commit is exactly the gap/loss poisoning
                     # exists to prevent
                     raise PersisterPoisoned(
                         "persister poisoned by an earlier failed commit"
-                    ) from self._poison
+                    ) from poison
                 crashpoint("persist.in_flight")
                 self._commit(job)
-                self.stats.committed += 1
+                with self._lock:
+                    self.stats.committed += 1
             except BaseException as e:       # noqa: BLE001 — poison on any
-                self.stats.failed += 1
-                if self._poison is None:
-                    self._poison = e
+                with self._lock:
+                    self.stats.failed += 1
+                    if self._poison is None:
+                        self._poison = e
             finally:
-                self._inflight = False
+                with self._lock:
+                    self._inflight = False
                 self._q.task_done()
 
     # -- submitter side ------------------------------------------------------
@@ -119,38 +128,53 @@ class BackgroundPersister:
         failed — the caller must fall back to a synchronous full save."""
         if self._closed:
             raise RuntimeError("persister is closed")
-        if self._poison is not None:
+        with self._lock:
+            poison = self._poison
+        if poison is not None:
             raise PersisterPoisoned(
                 "persister poisoned by an earlier failed commit"
-            ) from self._poison
+            ) from poison
         t0 = time.perf_counter()
         self._q.put(job)
-        self.stats.blocked_s += time.perf_counter() - t0
-        self.stats.submitted += 1
+        with self._lock:
+            self.stats.blocked_s += time.perf_counter() - t0
+            self.stats.submitted += 1
+
+    def stats_snapshot(self) -> PersistStats:
+        """A consistent copy of the counters, taken under the lock — the
+        caller-thread way to read stats while the worker is bumping them."""
+        with self._lock:
+            return replace(self.stats)
 
     @property
     def pending(self) -> int:
         """Jobs not yet durably committed (queued + in flight)."""
-        return self._q.qsize() + (1 if self._inflight else 0)
+        with self._lock:
+            inflight = self._inflight
+        return self._q.qsize() + (1 if inflight else 0)
 
     @property
     def poisoned(self) -> bool:
-        return self._poison is not None
+        with self._lock:
+            return self._poison is not None
 
     def flush(self, *, raise_on_poison: bool = True) -> None:
         """Barrier: return once every submitted job has been processed.
         Surfaces the first failure (the poison) unless told not to."""
         self._q.join()
-        if raise_on_poison and self._poison is not None:
+        with self._lock:
+            poison = self._poison
+        if raise_on_poison and poison is not None:
             raise PersisterPoisoned(
                 "a background commit failed; acknowledged state past the "
                 "last successful commit is covered by the WAL only"
-            ) from self._poison
+            ) from poison
 
     def clear_poison(self) -> None:
         """Called after a synchronous full snapshot supersedes the broken
         chain — background commits may resume."""
-        self._poison = None
+        with self._lock:
+            self._poison = None
 
     def close(self, timeout: float = 10.0) -> None:
         """Drain the queue, stop the worker, and join it."""

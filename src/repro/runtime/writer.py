@@ -348,7 +348,8 @@ class MaintenanceWriter:
         if policy not in SUMMARY_POLICIES:
             raise ValueError(f"policy must be one of {SUMMARY_POLICIES}, "
                              f"got {policy!r}")
-        self._pending_model = None
+        pending_model = None
+        refit = fallback = False
         if bounds is None:
             sample = self.drift.sample()
             if sample.size == 0:
@@ -359,19 +360,26 @@ class MaintenanceWriter:
             if policy == "learned":
                 hist, model = ln.learned_rebuild(self.drift.armed_histogram,
                                                  sample)
-                self._pending_model = model
-                if model is None:
-                    self.stats.learned_fallbacks += 1
-                else:
-                    self.stats.learned_refits += 1
+                pending_model = model
+                fallback = model is None
+                refit = not fallback
             else:
                 hist = hg.rebuild(self.drift.armed_histogram, sample)
             bounds = hg.host_bounds(hist)
         bounds = np.asarray(bounds, np.float32)
         if self.journal is not None:
             # the *materialized* bounds are journaled (not the reservoir
-            # they came from), so replay schedules the identical remap
+            # they came from), so replay schedules the identical remap.
+            # Everything above computed into locals only: append-before-
+            # admission means no writer state may change until this record
+            # is durable — a crash before here loses an operation that was
+            # never acknowledged, a crash after replays it exactly.
             self.journal.append_resummarize(bounds, policy)
+        self._pending_model = pending_model
+        if fallback:
+            self.stats.learned_fallbacks += 1
+        elif refit:
+            self.stats.learned_refits += 1
         self._pending_bounds = bounds
         self._pending_resummarize = list(range(self.index.spec.num_shards))
         self._resum_epoch = int(self.index.bounds_epochs.max()) + 1

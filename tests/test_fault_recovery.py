@@ -295,3 +295,57 @@ def test_watchdog_window_is_bounded_deque():
     assert wd.observe(100, 0.05) is True       # 5x the 0.01 median
     assert wd.flagged and wd.flagged[-1][0] == 100
     assert wd.observe(101, 0.012) is False
+
+
+# ---------------------------------------------------------------------------
+# Lock-discipline regressions (hippolint locks pass): the persister's
+# counters are mutated on the worker thread while the submitter reads them
+# ---------------------------------------------------------------------------
+
+def test_persister_stats_snapshot_is_locked_copy():
+    """Regression for the unlocked persister stats reads hippolint found:
+    ``stats_snapshot()`` must take the owning lock and hand back a *copy*,
+    so a caller-thread read never races the worker's counter bumps and
+    never aliases the live counters."""
+    import threading
+    from repro.runtime.persister import BackgroundPersister
+    gate = threading.Event()
+    p = BackgroundPersister(lambda job: gate.wait(5.0), max_queue=2)
+    try:
+        p.submit({"n": 1})
+        # the worker is (or is about to be) in flight, parked on the gate;
+        # caller-side reads must be consistent mid-commit
+        s = p.stats_snapshot()
+        assert s.submitted == 1 and s.committed == 0 and s.failed == 0
+        assert not p.poisoned
+        gate.set()
+        p.flush()
+        s2 = p.stats_snapshot()
+        assert (s2.submitted, s2.committed, s2.failed) == (1, 1, 0)
+        s2.committed = 999                 # a copy: internals unaffected
+        assert p.stats_snapshot().committed == 1
+        assert p.pending == 0
+    finally:
+        gate.set()
+        p.close()
+
+
+def test_persister_counters_exact_under_concurrent_reads():
+    """Hammer the caller-side accessors while the worker commits a stream
+    of jobs: every observation must be internally consistent (committed
+    never exceeds submitted) and the final counts must land exactly — a
+    torn or dropped increment would show up here as an off-by-N."""
+    from repro.runtime.persister import BackgroundPersister
+    p = BackgroundPersister(lambda job: None, max_queue=2)
+    try:
+        for i in range(200):
+            p.submit(i)
+            s = p.stats_snapshot()
+            assert s.committed <= s.submitted == i + 1
+            assert s.failed == 0 and p.pending >= 0 and not p.poisoned
+        p.flush()
+        s = p.stats_snapshot()
+        assert (s.submitted, s.committed, s.failed) == (200, 200, 0)
+        assert p.pending == 0
+    finally:
+        p.close()

@@ -1,0 +1,437 @@
+"""hippolint: golden seeded violations, suppression grammar, repo-clean gate.
+
+Each pass is exercised against a known-bad snippet in a throwaway repo
+layout and must report the violation at its exact file:line; the
+end-to-end test then runs every pass over this repository's committed
+tree and requires zero error findings — the static invariants
+(lock discipline, crash consistency, jit stability, declared markers)
+hold on every push, not just on the interleavings the fault tier
+happens to sample.
+"""
+import pathlib
+import sys
+import textwrap
+
+import pytest
+
+from repro.analysis import PASSES, load_context, run_passes
+from repro.analysis.base import SourceFile
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "scripts"))
+
+import lint as lint_cli  # noqa: E402  (scripts/lint.py CLI)
+
+
+def make_repo(tmp_path, sources):
+    """Materialize {relpath: source} as a lintable repo layout."""
+    for rel, text in sources.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(text))
+    return load_context(tmp_path)
+
+
+def run_lint(tmp_path, sources, *names):
+    ctx = make_repo(tmp_path, sources)
+    return run_passes(ctx, {n: PASSES[n] for n in names})
+
+
+def line_of(text, needle):
+    """1-based line of the first line containing ``needle``."""
+    for i, ln in enumerate(textwrap.dedent(text).splitlines(), 1):
+        if needle in ln:
+            return i
+    raise AssertionError(f"snippet does not contain {needle!r}")
+
+
+def only(findings, check):
+    got = [f for f in findings if f.check == check]
+    assert got, f"no {check!r} findings in {[f.render() for f in findings]}"
+    return got
+
+
+# ---------------------------------------------------------------------------
+# locks pass
+# ---------------------------------------------------------------------------
+
+BAD_UNGUARDED = """\
+    import threading
+
+    class Worker:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self._count = 0
+            self._t = threading.Thread(target=self._run)
+
+        def _run(self):
+            self._count += 1
+
+        def read(self):
+            return self._count
+"""
+
+
+def test_locks_unguarded_contended_attribute(tmp_path):
+    findings = run_lint(tmp_path, {"src/mod.py": BAD_UNGUARDED}, "locks")
+    [f] = only(findings, "locks")
+    assert f.path == "src/mod.py"
+    assert f.line == line_of(BAD_UNGUARDED, "self._count += 1")
+    assert "Worker._count" in f.message and "guarded-by" in f.message
+
+
+BAD_UNLOCKED_READ = """\
+    import threading
+
+    class Guarded:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self._n = 0  # guarded-by: _lock
+            self._t = threading.Thread(target=self._run)
+
+        def _run(self):
+            with self._lock:
+                self._n += 1
+
+        def read(self):
+            return self._n
+"""
+
+
+def test_locks_guarded_attr_read_outside_lock(tmp_path):
+    findings = run_lint(tmp_path, {"src/mod.py": BAD_UNLOCKED_READ}, "locks")
+    [f] = only(findings, "locks")
+    assert f.line == line_of(BAD_UNLOCKED_READ, "return self._n")
+    assert "read of Guarded._n" in f.message and "read()" in f.message
+
+
+BAD_REQUIRES = """\
+    import threading
+
+    class Helper:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self._items = []  # guarded-by: _lock
+            self._t = threading.Thread(target=self._run)
+
+        def _run(self):
+            with self._lock:
+                self._drop()
+
+        def _drop(self):  # requires-lock: _lock
+            self._items.clear()
+
+        def bad(self):
+            self._drop()  # lock not held
+"""
+
+
+def test_locks_requires_lock_call_site(tmp_path):
+    findings = run_lint(tmp_path, {"src/mod.py": BAD_REQUIRES}, "locks")
+    [f] = only(findings, "locks")
+    assert f.line == line_of(BAD_REQUIRES, "lock not held")
+    assert "requires-lock" in f.message and "bad()" in f.message
+
+
+def test_locks_single_threaded_class_is_exempt(tmp_path):
+    src = BAD_UNGUARDED.replace(
+        "        self._t = threading.Thread(target=self._run)\n", "")
+    findings = run_lint(tmp_path, {"src/mod.py": src}, "locks")
+    assert findings == [], [f.render() for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# crash pass
+# ---------------------------------------------------------------------------
+
+BAD_RENAME = """\
+    import os
+
+    def commit(tmp, dst):
+        with open(tmp, "wb") as f:
+            f.write(b"payload")
+        os.replace(tmp, dst)
+"""
+
+
+def test_crash_rename_without_fsync(tmp_path):
+    findings = run_lint(tmp_path, {"src/mod.py": BAD_RENAME}, "crash")
+    [f] = only(findings, "crash")
+    assert f.line == line_of(BAD_RENAME, "os.replace")
+    assert "fsync" in f.message
+
+
+def test_crash_fsynced_rename_is_clean(tmp_path):
+    src = BAD_RENAME.replace(
+        "    os.replace",
+        "        os.fsync(f.fileno())\n    os.replace")
+    findings = run_lint(tmp_path, {"src/mod.py": src}, "crash")
+    assert findings == [], [f.render() for f in findings]
+
+
+BAD_ADMISSION = """\
+    class Writer:
+        def write(self, v):
+            self.staged = v
+            self.journal.append_insert(0, v)
+"""
+
+
+def test_crash_admission_before_wal_append(tmp_path):
+    findings = run_lint(tmp_path, {"src/mod.py": BAD_ADMISSION}, "crash")
+    [f] = only(findings, "crash")
+    assert f.line == line_of(BAD_ADMISSION, "self.staged = v")
+    assert "journal-before-admission" in f.message
+
+
+FAKE_REGISTRY = """\
+    def _register(*sites):
+        return sites
+
+    SITES = _register(
+        "used.site",
+        "stale.site",
+    )
+"""
+
+BAD_SITES = """\
+    from repro.runtime.faultinject import crashpoint
+
+    def durable_mutation():
+        crashpoint("used.site")
+        crashpoint("rogue.site")
+"""
+
+
+def test_crash_site_registry_bijectivity(tmp_path):
+    findings = run_lint(tmp_path, {
+        "src/repro/runtime/faultinject.py": FAKE_REGISTRY,
+        "src/repro/runtime/mutator.py": BAD_SITES,
+    }, "crash")
+    got = only(findings, "crash")
+    assert len(got) == 2, [f.render() for f in got]
+    rogue = next(f for f in got if "rogue.site" in f.message)
+    assert rogue.path == "src/repro/runtime/mutator.py"
+    assert rogue.line == line_of(BAD_SITES, "rogue.site")
+    assert "not registered" in rogue.message
+    stale = next(f for f in got if "stale.site" in f.message)
+    assert stale.path == "src/repro/runtime/faultinject.py"
+    assert stale.line == line_of(FAKE_REGISTRY, '"stale.site"')
+    assert "no crashpoint() call site" in stale.message
+
+
+def test_duplicate_site_registration_raises_at_import():
+    from repro.runtime.faultinject import _register
+    with pytest.raises(ValueError, match="duplicate crash site 'a.b'"):
+        _register("a.b", "c.d", "a.b")
+    assert _register("a.b", "c.d") == ("a.b", "c.d")
+
+
+# ---------------------------------------------------------------------------
+# jit pass
+# ---------------------------------------------------------------------------
+
+BAD_NONZERO = """\
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def where_positive(x):
+        idx = jnp.nonzero(x > 0)
+        return idx
+"""
+
+
+def test_jit_nonzero_without_size(tmp_path):
+    findings = run_lint(tmp_path, {"src/mod.py": BAD_NONZERO}, "jit")
+    [f] = only(findings, "jit")
+    assert f.line == line_of(BAD_NONZERO, "jnp.nonzero")
+    assert "size=" in f.message
+
+
+def test_jit_sized_nonzero_is_clean(tmp_path):
+    src = BAD_NONZERO.replace("jnp.nonzero(x > 0)",
+                              "jnp.nonzero(x > 0, size=4)")
+    findings = run_lint(tmp_path, {"src/mod.py": src}, "jit")
+    assert findings == [], [f.render() for f in findings]
+
+
+BAD_COERCE = """\
+    import jax
+    from functools import partial
+
+    @partial(jax.jit, static_argnames=("k",))
+    def topk_mask(x, k):
+        n = int(x)
+        for i in range(k):
+            n += i
+        if x > 0:
+            n += 1
+        return n
+"""
+
+
+def test_jit_coercion_and_control_flow_over_traced(tmp_path):
+    findings = run_lint(tmp_path, {"src/mod.py": BAD_COERCE}, "jit")
+    got = only(findings, "jit")
+    lines = {f.line for f in got}
+    assert line_of(BAD_COERCE, "int(x)") in lines
+    assert line_of(BAD_COERCE, "if x > 0") in lines
+    # range(k) is clean: k is a static argname
+    assert line_of(BAD_COERCE, "range(k)") not in lines
+    assert len(got) == 2, [f.render() for f in got]
+
+
+def test_jit_shape_projections_are_static(tmp_path):
+    src = """\
+        import jax
+
+        @jax.jit
+        def rows(x):
+            n = int(x.shape[0])
+            if len(x) > 0:
+                n += x.ndim
+            return n
+    """
+    findings = run_lint(tmp_path, {"src/mod.py": src}, "jit")
+    assert findings == [], [f.render() for f in findings]
+
+
+BAD_JIT_LOOP = """\
+    import jax
+
+    def serve(batches, step):
+        outs = []
+        for b in batches:
+            f = jax.jit(step)
+            outs.append(f(b))
+        return outs
+"""
+
+
+def test_jit_wrapper_inside_loop(tmp_path):
+    findings = run_lint(tmp_path, {"src/mod.py": BAD_JIT_LOOP}, "jit")
+    [f] = only(findings, "jit")
+    assert f.line == line_of(BAD_JIT_LOOP, "jax.jit(step)")
+    assert "inside a loop" in f.message
+
+
+# ---------------------------------------------------------------------------
+# markers pass
+# ---------------------------------------------------------------------------
+
+FAKE_CONFTEST = """\
+    def pytest_configure(config):
+        config.addinivalue_line("markers", "declared: a registered tier")
+"""
+
+BAD_MARKER = """\
+    import pytest
+
+    pytestmark = pytest.mark.declared
+
+    @pytest.mark.undeclared
+    def test_something():
+        pass
+"""
+
+
+def test_markers_undeclared_marker(tmp_path):
+    findings = run_lint(tmp_path, {
+        "tests/conftest.py": FAKE_CONFTEST,
+        "tests/test_bad.py": BAD_MARKER,
+    }, "markers")
+    [f] = only(findings, "markers")
+    assert f.path == "tests/test_bad.py"
+    assert f.line == line_of(BAD_MARKER, "pytest.mark.undeclared")
+    assert "'undeclared'" in f.message
+
+
+# ---------------------------------------------------------------------------
+# deadcode pass (report-only)
+# ---------------------------------------------------------------------------
+
+def test_deadcode_inventories_unreachable_modules(tmp_path):
+    findings = run_lint(tmp_path, {
+        "src/repro/core/used.py": "from repro.lost import helper\n",
+        "src/repro/lost/helper.py": "LIVE = 1\n",
+        "src/repro/lost/dead.py": "DORMANT = 1\n",
+        "tests/test_dead.py": "import repro.lost.dead\n",
+    }, "deadcode")
+    got = only(findings, "deadcode")
+    assert all(f.severity == "info" for f in got)
+    [f] = [f for f in got if "repro.lost.dead" in f.message]
+    assert f.path == "src/repro/lost/dead.py"
+    assert "pinned only by tests/" in f.message
+    assert not any("repro.lost.helper" in f.message for f in got), \
+        "helper is imported by core and must count as reachable"
+
+
+# ---------------------------------------------------------------------------
+# suppression grammar
+# ---------------------------------------------------------------------------
+
+def test_suppression_with_reason_silences(tmp_path):
+    src = BAD_RENAME.replace(
+        "os.replace(tmp, dst)",
+        "os.replace(tmp, dst)  # hippolint: disable=crash -- scratch file")
+    findings = run_lint(tmp_path, {"src/mod.py": src}, "crash")
+    assert findings == [], [f.render() for f in findings]
+
+
+def test_suppression_without_reason_is_an_error(tmp_path):
+    src = BAD_RENAME.replace(
+        "os.replace(tmp, dst)",
+        "os.replace(tmp, dst)  # hippolint: disable=crash")
+    findings = run_lint(tmp_path, {"src/mod.py": src}, "crash")
+    [f] = findings
+    assert f.check == "suppress" and "justification" in f.message
+
+
+def test_suppression_unknown_pass_is_an_error(tmp_path):
+    src = BAD_RENAME.replace(
+        "os.replace(tmp, dst)",
+        "os.replace(tmp, dst)  # hippolint: disable=vibes -- because")
+    findings = run_lint(tmp_path, {"src/mod.py": src}, "crash")
+    assert any(f.check == "suppress" and "unknown pass" in f.message
+               for f in findings)
+
+
+def test_standalone_suppression_applies_to_next_code_line(tmp_path):
+    src = BAD_RENAME.replace(
+        "    os.replace(tmp, dst)",
+        "    # hippolint: disable=crash -- scratch file\n"
+        "    os.replace(tmp, dst)")
+    findings = run_lint(tmp_path, {"src/mod.py": src}, "crash")
+    assert findings == [], [f.render() for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: this repository is clean, and the CLI reports it so
+# ---------------------------------------------------------------------------
+
+def test_repo_is_clean_across_all_passes():
+    ctx = load_context(REPO)
+    findings = run_passes(ctx, PASSES)
+    errors = [f for f in findings if f.severity == "error"]
+    assert not errors, "the committed tree must lint clean:\n" + \
+        "\n".join(f.render() for f in errors)
+
+
+def test_every_committed_suppression_carries_a_reason():
+    ctx = load_context(REPO)
+    for sf in ctx.files:
+        for s in sf.suppressions:
+            assert s.reason, \
+                f"{sf.rel}:{s.decl_line}: suppression without justification"
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    assert lint_cli.main(["--all"]) == 0
+    capsys.readouterr()
+    make_repo(tmp_path, {"src/mod.py": BAD_RENAME})
+    rc = lint_cli.main(["--root", str(tmp_path), "crash"])
+    out = capsys.readouterr().out
+    line = line_of(BAD_RENAME, "os.replace")
+    assert rc == 1
+    assert f"src/mod.py:{line}: [crash]" in out

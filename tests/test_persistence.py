@@ -667,7 +667,7 @@ def test_background_save_poison_falls_back_to_sync_full(tmp_path,
     eng.flush()                      # delta job fails on the worker thread
     with pytest.raises(PersisterPoisoned):
         eng.flush_durable()
-    assert eng._persister.stats.failed == 1
+    assert eng._persister.stats_snapshot().failed == 1
     monkeypatch.undo()
 
     for v in rng.uniform(120.0, 130.0, 8):
@@ -682,3 +682,70 @@ def test_background_save_poison_falls_back_to_sync_full(tmp_path,
     eng2.flush()
     ps = preds()
     np.testing.assert_array_equal(eng2.run_all(ps), value_brute(vals, ps))
+
+
+# ---------------------------------------------------------------------------
+# hippolint regressions: journal-before-admission in schedule_resummarize,
+# and the durable watermark crossing the persister/foreground thread line
+# ---------------------------------------------------------------------------
+
+def test_resummarize_journals_before_admission(tmp_path):
+    """Regression for the crash-pass finding in schedule_resummarize: the
+    learned model, fallback/refit counters, and pending bounds were
+    admitted *before* the WAL append. A crash at the append (kill -9
+    stand-in) must leave the writer exactly as it was — the operation was
+    never acknowledged, so no trace of it may survive."""
+    from repro.runtime.faultinject import InjectedCrash, crash_points
+    rng = np.random.default_rng(31)
+    base = np.sort(rng.uniform(0, 100, 200))
+    idx = make_sidx(base, summary="learned")
+    writer = MaintenanceWriter(idx)
+    writer.journal = Journal(tmp_path, idx.spec.num_shards, sync=False)
+    for v in rng.uniform(0, 100, 64):
+        writer.write(float(v))
+    writer.flush()
+
+    def state():
+        return (writer._pending_model, writer._pending_bounds,
+                writer.stats.learned_refits, writer.stats.learned_fallbacks,
+                writer.pending_resummarize_shards())
+
+    before = state()
+    wm = writer.journal.last_seqno
+    crash_points.arm("wal.pre_append", times=1)
+    try:
+        with pytest.raises(InjectedCrash):
+            writer.schedule_resummarize()
+    finally:
+        crash_points.reset()
+    assert state() == before, \
+        "a crashed (unacknowledged) resummarize left writer state behind"
+    assert writer.journal.last_seqno == wm, "nothing may have been appended"
+    # and with the crash gone, the same call goes through whole
+    writer.schedule_resummarize()
+    assert writer.journal.last_seqno == wm + 1
+    assert writer.pending_resummarize_shards()
+
+
+def test_background_watermark_advances_under_lock(tmp_path):
+    """Regression for the locks-pass finding on _durable_watermark: the
+    persister's commit callback advances it on the worker thread while
+    the foreground derives persist_lag from it. After the flush barrier
+    the locked read must equal the journal watermark exactly."""
+    rng = np.random.default_rng(33)
+    base = np.sort(rng.uniform(0, 100, 200))
+    root = tmp_path / "dur"
+    eng = QueryEngine(make_sidx(base), batch=8, drain_policy="manual",
+                      auto_resummarize=False, storage_dir=root,
+                      background_save=True)
+    for v in rng.uniform(100, 120, 8):
+        eng.write(float(v))
+    eng.flush()                       # drain -> background delta commit
+    eng.flush_durable()
+    with eng._durable_lock:
+        wm = eng._durable_watermark
+    assert wm == eng.journal.last_seqno > 0
+    eng._sync_writer_stats()
+    assert eng.stats.persist_lag == 0
+    assert eng.stats.persist_pending == 0
+    eng.close()
